@@ -1,0 +1,55 @@
+"""Paper Fig. 8: per-iteration latency of zero-sum masking (ZM), DP masking
+(DP) and DP with dynamic clipping (DP-dyn), by batch size, on MNIST-MLP3 —
+showing the barrier's cost is negligible vs gradient compute."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.configs.base import (MeshConfig, OptimizerConfig, PrivacyConfig,
+                                RunConfig, SHAPES)
+from repro.configs.paper_models import MNIST_MLP3
+from repro.data.synthetic import synthetic_mnist
+from repro.distributed import steps as steps_mod
+from repro.models.registry import Model
+from repro.models.small import build_small_model
+
+
+def _model():
+    sm = build_small_model(MNIST_MLP3)
+    return Model(cfg=None, init=sm.init, loss=sm.loss, init_cache=None,
+                 prefill=None, decode_step=None)
+
+
+VARIANTS = {
+    "no-barrier": PrivacyConfig(enabled=False, n_silos=4),
+    "ZM": PrivacyConfig(enabled=True, sigma=0.0, clip_bound=1e9, n_silos=4),
+    "DP": PrivacyConfig(enabled=True, sigma=0.5, clip_bound=1.0, n_silos=4),
+    "DP-dyn": PrivacyConfig(enabled=True, sigma=0.5, clip_bound=1.0,
+                            dynamic_clip=True, n_silos=4),
+}
+
+
+def run():
+    model = _model()
+    train, _ = synthetic_mnist(n_train=4096, n_test=64)
+    for bs in (64, 256, 1024):
+        batch = {"x": jnp.asarray(train.x[:bs]), "y": jnp.asarray(train.y[:bs])}
+        base_us = None
+        for name, priv in VARIANTS.items():
+            rc = RunConfig(model=None, shape=SHAPES["train_4k"],
+                           mesh=MeshConfig((1,), ("data",)), privacy=priv,
+                           optimizer=OptimizerConfig(name="sgd", lr=0.1))
+            state = steps_mod.init_train_state(model, rc, jax.random.PRNGKey(0))
+            step = jax.jit(steps_mod.build_train_step(model, rc))
+            key = jax.random.PRNGKey(1)
+            us = timeit(lambda s=state: step(s, batch, key)[1]["loss"])
+            if name == "no-barrier":
+                base_us = us
+            overhead = "" if base_us is None else f"overhead={us / base_us - 1:+.1%}"
+            emit(f"fig8/barrier_latency/{name}/bs{bs}", us, overhead)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Paper Fig. 10: execution-environment / barrier overhead on the three
+paper models (MLP3, CNN6, WRN28) — barrier on/off latency per iteration
+(the TPU analogue of CCT-NS vs CCT-SB: barrier mechanisms vs bare training).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs.base import (MeshConfig, OptimizerConfig, PrivacyConfig,
+                                RunConfig, SHAPES)
+from repro.configs.paper_models import CIFAR10_CNN6, CIFAR10_WRN28, MNIST_MLP3
+from repro.data.synthetic import synthetic_cifar10, synthetic_mnist
+from repro.distributed import steps as steps_mod
+from repro.models.registry import Model
+from repro.models.small import build_small_model
+
+
+def run():
+    cases = [("mnist-mlp3", MNIST_MLP3, synthetic_mnist, (64, 1024)),
+             ("cifar10-cnn6", CIFAR10_CNN6, synthetic_cifar10, (64, 256)),
+             ("cifar10-wrn28", CIFAR10_WRN28, synthetic_cifar10, (64,))]
+    for name, cfgm, data_fn, batch_sizes in cases:
+        sm = build_small_model(cfgm)
+        model = Model(cfg=None, init=sm.init, loss=sm.loss, init_cache=None,
+                      prefill=None, decode_step=None)
+        train, _ = data_fn(1024, 64)
+        for bs in batch_sizes:
+            base = None
+            for mode, priv in (
+                ("bare", PrivacyConfig(enabled=False, n_silos=4)),
+                ("barrier", PrivacyConfig(enabled=True, sigma=0.5,
+                                          clip_bound=1.0, dynamic_clip=True,
+                                          noise_lambda=0.7, n_silos=4)),
+            ):
+                rc = RunConfig(model=None, shape=SHAPES["train_4k"],
+                               mesh=MeshConfig((1,), ("data",)), privacy=priv,
+                               optimizer=OptimizerConfig(name="sgd", lr=0.1))
+                state = steps_mod.init_train_state(model, rc, jax.random.PRNGKey(0))
+                step = jax.jit(steps_mod.build_train_step(model, rc))
+                b = {"x": jnp.asarray(train.x[:bs]),
+                     "y": jnp.asarray(train.y[:bs])}
+                state, _ = step(state, b, jax.random.PRNGKey(1))
+                t0 = time.perf_counter()
+                iters = 5
+                for _ in range(iters):
+                    state, m = step(state, b, jax.random.PRNGKey(1))
+                jax.block_until_ready(m["loss"])
+                us = (time.perf_counter() - t0) / iters * 1e6
+                if mode == "bare":
+                    base = us
+                    emit(f"fig10/{name}/bs{bs}/bare", us)
+                else:
+                    emit(f"fig10/{name}/bs{bs}/barrier", us,
+                         f"overhead={us / base - 1:+.1%}")
+
+
+if __name__ == "__main__":
+    run()

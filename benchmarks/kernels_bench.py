@@ -1,0 +1,50 @@
+"""Microbenchmarks of the Pallas-kernel ops vs their jnp oracles (interpret
+mode on CPU measures correctness-path overhead, not TPU speed; the roofline
+table covers TPU projections)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.kernels.dp_clip import ref as dref
+from repro.kernels.flash_attention import ref as fref
+from repro.kernels.flash_attention.blocked import flash_attention_xla
+from repro.kernels.rwkv6 import ref as rref
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+
+    # flash attention (jnp blocked vs naive ref), train-ish shape
+    B, S, Hq, Hkv, D = 2, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    f_ref = jax.jit(lambda a, b, c: fref.attention_ref(a, b, c, True))
+    f_blk = jax.jit(lambda a, b, c: flash_attention_xla(a, b, c, True, 256))
+    emit("kernels/attention_ref_s1024", timeit(f_ref, q, k, v))
+    emit("kernels/attention_flashxla_s1024", timeit(f_blk, q, k, v))
+
+    # rwkv chunked vs sequential
+    B, S, H, N = 2, 512, 4, 32
+    r = jax.random.normal(ks[0], (B, S, H, N)) * 0.5
+    kk = jax.random.normal(ks[1], (B, S, H, N)) * 0.5
+    vv = jax.random.normal(ks[2], (B, S, H, N)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, N))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, N)) * 0.3
+    s0 = jnp.zeros((B, H, N, N))
+    f_seq = jax.jit(lambda *a: rref.wkv_sequential(*a)[0])
+    f_chk = jax.jit(lambda *a: rref.wkv_chunked_jnp(*a)[0])
+    emit("kernels/rwkv_sequential_s512", timeit(f_seq, r, kk, vv, w, u, s0))
+    emit("kernels/rwkv_chunked_s512", timeit(f_chk, r, kk, vv, w, u, s0))
+
+    # dp_clip fused vs two-pass
+    g = jax.random.normal(ks[0], (256, 8192))
+    f_ss = jax.jit(dref.per_example_sumsq_ref)
+    emit("kernels/dp_sumsq_256x8192", timeit(f_ss, g))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Roofline summary from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/{single,multi}/*.json (produced by
+``python -m repro.launch.dryrun --all``) and emits one CSV row per cell with
+the three terms + dominant bottleneck. Run the dry-run first; this bench
+only aggregates (no 512-device init here)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def run():
+    if not DRYRUN_DIR.exists():
+        emit("roofline/missing", 0.0, "run python -m repro.launch.dryrun --all first")
+        return
+    for mesh_dir in sorted(DRYRUN_DIR.iterdir()):
+        if not mesh_dir.is_dir():
+            continue
+        for f in sorted(mesh_dir.glob("*.json")):
+            rec = json.loads(f.read_text())
+            name = f"roofline/{mesh_dir.name}/{f.stem}"
+            if rec.get("status") != "ok":
+                emit(name, 0.0, rec.get("status", "?") + ":" +
+                     rec.get("reason", rec.get("error", ""))[:60])
+                continue
+            r = rec["roofline"]
+            t_dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+            emit(name, t_dom * 1e6,
+                 f"dom={r['dominant']} frac={r['roofline_fraction']:.3f} "
+                 f"tc={r['t_compute_s']:.2e} tm={r['t_memory_s']:.2e} "
+                 f"tx={r['t_collective_s']:.2e} "
+                 f"useful={r['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

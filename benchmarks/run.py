@@ -1,0 +1,51 @@
+"""Benchmark entrypoint: one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig5   utility vs epsilon              (privacy_utility)
+  fig7   dynamic clipping                (dynamic_clipping)
+  fig8   barrier latency ZM/DP/DP-dyn    (barrier_latency)
+  fig9   noise correction utility        (noise_correction)
+  fig10  barrier overhead per model      (barrier_overhead)
+  fig11  vs FL-DP / Citadel / CITADEL++  (sota_comparison)
+  fig14  sequence-epsilon closed form    (noise_correction)
+  kernels  op microbenchmarks            (kernels_bench)
+  roofline per (arch x shape x mesh)     (roofline; reads dry-run artifacts)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (barrier_latency, barrier_overhead,
+                            dynamic_clipping, kernels_bench, noise_correction,
+                            privacy_utility, roofline, sota_comparison)
+    print("name,us_per_call,derived")
+    sections = [
+        ("fig8", barrier_latency.run),
+        ("fig5", privacy_utility.run),
+        ("fig7", dynamic_clipping.run),
+        ("fig9/fig14", noise_correction.run),
+        ("fig10", barrier_overhead.run),
+        ("fig11", sota_comparison.run),
+        ("kernels", kernels_bench.run),
+        ("roofline", roofline.run),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failures = 0
+    for name, fn in sections:
+        if only and only not in name:
+            continue
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,380 @@
+"""Mini HLO cost model over ``compiled.as_text()``.
+
+XLA's ``cost_analysis()`` counts a ``while`` body once regardless of trip
+count (verified empirically) — useless for scan-over-layers models. This
+parser rebuilds per-chip cost totals with loop multipliers:
+
+  * computations parsed from the post-partitioning HLO (local shapes);
+  * a call graph (while bodies/conditions, fusions, calls, conditionals);
+  * while trip counts recovered from the largest integer constant in the
+    loop-condition computation (our scans compare an induction counter
+    against the layer count — robust for graphs we generate);
+  * flops from ``dot``/``convolution`` ops (2 * numel(result) * contracted);
+  * HBM bytes from fusion/dot/copy/collective boundaries (operands + result
+    read/written once per execution — the XLA fusion-unit memory model);
+  * collective bytes per type, with cross-pod classification from
+    replica_groups strides.
+
+Everything is per-chip because post-SPMD shapes are local.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^(\([^)]*\)|\S+?)\s+([\w\-]+)\(")
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\},?")
+
+
+def _parse_shape(s: str):
+    """'f32[64,256]' -> (dtype, [64,256]); tuples -> list of leaves."""
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = [int(x) for x in dims.split(",") if x] if dims else []
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(parsed) -> int:
+    total = 0
+    for dt, shape in parsed:
+        total += _DTYPE_BYTES[dt] * math.prod(shape) if shape else _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_sig: str
+    rest: str
+
+    def result_bytes(self) -> int:
+        return _nbytes(_parse_shape(self.result_sig))
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    defs: dict = field(default_factory=dict)  # op name -> result signature
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    """Computation headers start at column 0 and end with '{' (op lines are
+    indented) — robust against '=' inside /*index=N*/ comments in long
+    parameter tuples."""
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        is_header = (not line[:1].isspace() and stripped.endswith("{")
+                     and not stripped.startswith("HloModule"))
+        if is_header:
+            header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", stripped)
+            if header:
+                cur = Computation(header.group(1))
+                comps[cur.name] = cur
+            continue
+        if stripped.startswith("}"):
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(stripped)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        om = _OP_RE.match(rhs)
+        if not om:
+            continue
+        result_sig, kind = om.group(1), om.group(2)
+        op = Op(name, kind, result_sig, rhs)
+        cur.ops.append(op)
+        cur.defs[name] = result_sig
+    return comps
+
+
+def _operand_names(op: Op) -> list[str]:
+    # operands are inside the first (...) after the op kind
+    idx = op.rest.find(op.kind + "(")
+    if idx < 0:
+        return []
+    depth = 0
+    start = idx + len(op.kind)
+    buf = ""
+    for ch in op.rest[start:]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf += ch
+    names = []
+    for tok in buf.split(","):
+        tok = tok.strip()
+        if tok.startswith("%"):
+            names.append(tok[1:])
+        elif re.match(r"^[\w.\-]+$", tok):
+            names.append(tok)
+    return names
+
+
+def _operand_bytes(op: Op, comp: Computation) -> int:
+    total = 0
+    for nm in _operand_names(op):
+        sig = comp.defs.get(nm)
+        if sig:
+            total += _nbytes(_parse_shape(sig))
+    return total
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    res = _parse_shape(op.result_sig)
+    if not res:
+        return 0.0
+    numel = math.prod(res[0][1]) if res[0][1] else 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    operands = _operand_names(op)
+    if not m or not operands:
+        return 2.0 * numel  # fallback
+    lhs_sig = comp.defs.get(operands[0], "")
+    lhs = _parse_shape(lhs_sig)
+    if not lhs:
+        return 2.0 * numel
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    k = 1
+    for d in cdims:
+        if d < len(lhs[0][1]):
+            k *= lhs[0][1][d]
+    return 2.0 * numel * k
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    res = _parse_shape(op.result_sig)
+    operands = _operand_names(op)
+    if not res or len(operands) < 2:
+        return 0.0
+    numel = math.prod(res[0][1]) if res[0][1] else 1
+    ksig = _parse_shape(comp.defs.get(operands[1], ""))
+    if not ksig:
+        return 2.0 * numel
+    kshape = ksig[0][1]
+    # output numel * 2 * (kernel spatial x input feature) = kernel numel / out_feat
+    # approximate: 2 * out_numel * prod(kernel)/out_channels
+    out_ch = kshape[-1] if kshape else 1
+    k = math.prod(kshape) / max(out_ch, 1)
+    return 2.0 * numel * k
+
+
+def _fusion_root(op: Op, comps: dict):
+    for cname in _CALLS_RE.findall(op.rest):
+        c = comps.get(cname)
+        if c and c.ops:
+            return c.ops[-1], c
+    return None, None
+
+
+def _fusion_is_dus(op: Op, comps: dict) -> bool:
+    root, _ = _fusion_root(op, comps)
+    return root is not None and root.kind == "dynamic-update-slice"
+
+
+def _dus_update_bytes(op: Op, comps: dict) -> int:
+    root, c = _fusion_root(op, comps)
+    if root is None:
+        return 0
+    ops_ = _operand_names(root)
+    if len(ops_) > 1:
+        sig = c.defs.get(ops_[1])
+        if sig:
+            return _nbytes(_parse_shape(sig))
+    return 0
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.search(r"constant\((\d+)\)", op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# per-chip traffic factor x (operand|result) bytes (ring collective model)
+_COLL_COST = {
+    "all-reduce": ("operand", 2.0),
+    "all-gather": ("result", 1.0),
+    "reduce-scatter": ("operand", 1.0),
+    "all-to-all": ("operand", 1.0),
+    "collective-permute": ("operand", 1.0),
+}
+
+_FUSION_BOUNDARY = ("fusion", "dot", "convolution", "copy", "scatter",
+                    "gather", "dynamic-slice", "dynamic-update-slice",
+                    "sort", "reduce", "transpose", "broadcast", "iota",
+                    "concatenate", "reshape", "slice", "pad", "select")
+
+# ops whose results typically stay in registers / get fused on TPU; we count
+# HBM traffic only at fusion boundaries:
+_HBM_OPS = ("fusion", "dot", "convolution", "copy", "scatter", "sort",
+            "dynamic-update-slice") + _COLLECTIVES
+
+
+@dataclass
+class CostSummary:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: dict = field(default_factory=dict)  # type -> weighted bytes
+    collective_raw: dict = field(default_factory=dict)  # type -> operand bytes
+    cross_pod_bytes: float = 0.0
+    trip_counts: dict = field(default_factory=dict)
+    top_flops: list = field(default_factory=list)  # (flops, mult, name, meta)
+    top_hbm: list = field(default_factory=list)
+    top_coll: list = field(default_factory=list)
+
+    @property
+    def total_collective(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def keep_top(self, n: int = 20):
+        self.top_flops = sorted(self.top_flops, reverse=True)[:n]
+        self.top_hbm = sorted(self.top_hbm, reverse=True)[:n]
+        self.top_coll = sorted(self.top_coll, reverse=True)[:n]
+
+
+def _is_cross_pod(op: Op, devices_per_pod: int) -> bool:
+    m = _GROUPS_RE.search(op.rest)
+    if not m:
+        m2 = re.search(r"replica_groups=\{\{([^}]*)\}", op.rest)
+        if not m2:
+            return False
+        ids = [int(x) for x in m2.group(1).split(",") if x.strip().isdigit()]
+        return bool(ids) and (max(ids) // devices_per_pod != min(ids) // devices_per_pod)
+    first = m.group(1).split("}")[0].strip("{}")
+    ids = [int(x) for x in first.split(",") if x.strip().lstrip("-").isdigit()]
+    if not ids:
+        return False
+    return max(ids) // devices_per_pod != min(ids) // devices_per_pod
+
+
+def analyze(text: str, devices_per_pod: int = 256) -> CostSummary:
+    comps = parse_hlo(text)
+    entry = None
+    for name in comps:
+        if name.startswith("main") or ".main" in name or name.startswith("jit"):
+            entry = name
+    if entry is None and comps:
+        entry = list(comps)[-1]
+
+    summary = CostSummary()
+    visited_mult: dict[str, float] = {}
+
+    def walk(comp_name: str, mult: float):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        visited_mult[comp_name] = visited_mult.get(comp_name, 0.0) + mult
+        for op in comp.ops:
+            if op.kind == "while":
+                cm = _COND_RE.search(op.rest)
+                bm = re.search(r"body=%?([\w.\-]+)", op.rest)
+                trips = 1
+                if cm and cm.group(1) in comps:
+                    trips = _trip_count(comps[cm.group(1)])
+                summary.trip_counts[op.name] = trips
+                if bm:
+                    walk(bm.group(1), mult * trips)
+                if cm:
+                    walk(cm.group(1), mult * trips)
+                continue
+            if op.kind in ("fusion", "call", "custom-call", "map", "reduce",
+                           "reduce-window", "scatter", "select-and-scatter",
+                           "conditional"):
+                for cname in _CALLS_RE.findall(op.rest):
+                    if cname in comps and cname != comp_name:
+                        walk(cname, mult)
+            # flops
+            if op.kind == "dot":
+                f = mult * _dot_flops(op, comp)
+                summary.flops += f
+                meta = re.search(r'op_name="([^"]*)"', op.rest)
+                summary.top_flops.append(
+                    (f, mult, op.name, op.result_sig,
+                     meta.group(1)[-90:] if meta else ""))
+            elif op.kind == "convolution":
+                summary.flops += mult * _conv_flops(op, comp)
+            # collectives
+            if op.kind in _COLLECTIVES:
+                basis, factor = _COLL_COST[op.kind]
+                opb = _operand_bytes(op, comp)
+                rb = op.result_bytes()
+                raw = opb if basis == "operand" else rb
+                if raw == 0:
+                    raw = max(opb, rb)
+                # XLA-CPU promotes bf16 all-reduce accumulation to f32
+                # (to_apply=%..._promoted); on TPU the wire stays bf16.
+                if "promoted" in op.rest and op.kind == "all-reduce":
+                    raw *= 0.5
+                summary.collective_raw[op.kind] = (
+                    summary.collective_raw.get(op.kind, 0.0) + mult * raw)
+                summary.collective_bytes[op.kind] = (
+                    summary.collective_bytes.get(op.kind, 0.0) + mult * factor * raw)
+                if _is_cross_pod(op, devices_per_pod):
+                    summary.cross_pod_bytes += mult * factor * raw
+                meta = re.search(r'op_name="([^"]*)"', op.rest)
+                summary.top_coll.append(
+                    (mult * factor * raw, mult, op.name, op.result_sig,
+                     meta.group(1)[-90:] if meta else ""))
+            # HBM traffic model: every boundary op writes its result once;
+            # reads are counted only for dot (MXU streams both operands) —
+            # on TPU the elementwise producers/consumers fuse, so counting
+            # operand bytes of every fusion double-counts each tensor.
+            if op.kind in _HBM_OPS:
+                if op.kind == "dynamic-update-slice":
+                    # in-place update: only the written slice moves (the big
+                    # buffer is aliased), operands[1] is the update
+                    ops_ = _operand_names(op)
+                    upd = _nbytes(_parse_shape(comp.defs.get(ops_[1], ""))) \
+                        if len(ops_) > 1 else 0
+                    b = mult * 2 * upd
+                elif op.kind == "fusion" and _fusion_is_dus(op, comps):
+                    # fused in-place scan-stack write: slice bytes, not buffer
+                    b = mult * 2 * _dus_update_bytes(op, comps)
+                elif op.kind in ("dot", "convolution"):
+                    b = mult * (op.result_bytes() + _operand_bytes(op, comp))
+                else:
+                    b = mult * op.result_bytes()
+                summary.hbm_bytes += b
+                meta = re.search(r'op_name="([^"]*)"', op.rest)
+                summary.top_hbm.append(
+                    (b, mult, op.name, op.result_sig,
+                     meta.group(1)[-90:] if meta else ""))
+
+    if entry:
+        walk(entry, 1.0)
+    summary.keep_top()
+    return summary

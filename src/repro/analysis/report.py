@@ -1,0 +1,83 @@
+"""Generate the EXPERIMENTS.md roofline tables from dry-run artifacts."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config, shape_applicability
+
+DRYRUN = Path("experiments/dryrun")
+
+
+def load(mesh: str) -> dict:
+    out = {}
+    d = DRYRUN / mesh
+    if not d.exists():
+        return out
+    for f in d.glob("*.json"):
+        rec = json.loads(f.read_text())
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.2f}GB"
+
+
+def roofline_table(mesh: str) -> str:
+    recs = load(mesh)
+    lines = [
+        "| arch | shape | dominant | t_compute | t_memory | t_collective "
+        "| roofline frac | useful flops | HBM/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    from repro.configs import ARCH_IDS
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, reason = shape_applicability(cfg, shape)
+            if not ok:
+                lines.append(f"| {arch} | {sname} | — | — | — | — | N/A | — | "
+                             f"{reason} |")
+                continue
+            rec = recs.get((arch, sname))
+            if rec is None or rec.get("status") != "ok":
+                status = rec.get("status", "missing") if rec else "missing"
+                lines.append(f"| {arch} | {sname} | {status} | | | | | | |")
+                continue
+            r = rec["roofline"]
+            mem = rec["memory"]
+            hbm = (mem["argument_bytes_per_dev"] + mem["temp_bytes_per_dev"]
+                   + mem["output_bytes_per_dev"] - mem["alias_bytes_per_dev"])
+            lines.append(
+                f"| {arch} | {sname} | **{r['dominant']}** "
+                f"| {r['t_compute_s']:.2e}s | {r['t_memory_s']:.2e}s "
+                f"| {r['t_collective_s']:.2e}s | {r['roofline_fraction']:.3f} "
+                f"| {r['useful_flops_ratio']:.2f} | {fmt_bytes(hbm)} |")
+    return "\n".join(lines)
+
+
+def dryrun_summary(mesh: str) -> str:
+    recs = load(mesh)
+    ok = sum(1 for r in recs.values() if r.get("status") == "ok")
+    lines = [f"{ok}/{len(recs)} cells compiled.", "",
+             "| arch | shape | params | compile | collective mix (weighted bytes/chip) | cross-pod |",
+             "|---|---|---|---|---|---|"]
+    for (arch, sname), rec in sorted(recs.items()):
+        if rec.get("status") != "ok":
+            continue
+        hc = rec["hlo_cost"]
+        mix = ", ".join(f"{k.replace('all-', 'a')}:{v:.1e}"
+                        for k, v in sorted(hc["collective_bytes_weighted"].items()))
+        lines.append(
+            f"| {arch} | {sname} | {rec['params_B']:.1f}B "
+            f"| {rec['compile_s']:.0f}s | {mix} "
+            f"| {hc['cross_pod_bytes']:.1e} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    kind = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "single"
+    print(roofline_table(mesh) if kind == "roofline" else dryrun_summary(mesh))

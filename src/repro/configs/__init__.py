@@ -1,0 +1,87 @@
+"""Config registry: ``get_config(arch_id)`` / ``get_smoke_config(arch_id)``.
+
+Arch ids use the assignment's names (e.g. ``--arch mistral-large-123b``).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    MeshConfig,
+    ModelConfig,
+    OptimizerConfig,
+    PrivacyConfig,
+    RunConfig,
+    ShapeConfig,
+    SHAPES,
+    active_param_count,
+    applicable_shapes,
+    param_count,
+    reduce_for_smoke,
+    shape_applicability,
+)
+
+_ARCH_MODULES: dict[str, str] = {
+    "mistral-large-123b": "mistral_large_123b",
+    "stablelm-3b": "stablelm_3b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "qwen2.5-3b": "qwen25_3b",
+    "rwkv6-7b": "rwkv6_7b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "hubert-xlarge": "hubert_xlarge",
+    "zamba2-7b": "zamba2_7b",
+}
+
+ARCH_IDS: tuple[str, ...] = tuple(_ARCH_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def list_cells() -> list[tuple[str, str]]:
+    """All (arch, shape) pairs, including not-applicable ones."""
+    return [(a, s) for a in ARCH_IDS for s in SHAPES]
+
+
+def runnable_cells() -> list[tuple[str, str]]:
+    out = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s, shape in SHAPES.items():
+            if shape_applicability(cfg, shape)[0]:
+                out.append((a, s))
+    return out
+
+
+__all__ = [
+    "ARCH_IDS",
+    "MeshConfig",
+    "ModelConfig",
+    "OptimizerConfig",
+    "PrivacyConfig",
+    "RunConfig",
+    "SHAPES",
+    "ShapeConfig",
+    "active_param_count",
+    "applicable_shapes",
+    "get_config",
+    "get_smoke_config",
+    "list_cells",
+    "param_count",
+    "reduce_for_smoke",
+    "runnable_cells",
+    "shape_applicability",
+]

@@ -1,0 +1,2 @@
+# CITADEL++ core: the paper's privacy barrier (accountant, masking, clipping,
+# noise correction) + the TEE-protocol simulation substrate (core/tee).

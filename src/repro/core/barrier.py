@@ -1,0 +1,140 @@
+"""The privacy barrier (paper §4): composition of clipping, zero-sum masking
+and corrected DP noise around the gradient synchronization step.
+
+Two numerically-equivalent paths (DESIGN.md §2), both exposed to the step
+builders in distributed/steps.py:
+
+* ``barrier_sync``  — paper-faithful: runs *inside* shard_map manual over the
+  silo axes. Per-silo clip -> per-silo zero-sum mask -> explicit psum. The
+  masked per-silo gradients exist on the wire exactly as in the paper.
+* ``fused_noise``   — beyond-paper: per-silo clipping via vmap under pjit,
+  masks elided (they cancel in the aggregate), corrected DP noise injected
+  once post-reduce. Identical aggregate distribution; XLA fuses the noise add
+  into the reduce epilogue.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PrivacyConfig
+from repro.core import clipping, masking, noise_correction
+from repro.core.noise_correction import NoiseState
+
+
+class BarrierKeys(NamedTuple):
+    """Per-step keys owned by the admin component. 32 bytes each — the whole
+    of the admin->silo 'mask distribution' traffic on the pairwise path."""
+    key_r: jax.Array    # pairwise zero-sum streams
+    key_xi: jax.Array   # DP noise streams (step t)
+    key_clip: jax.Array  # dynamic-clipping DP noise
+
+
+def step_keys(root_key, step) -> BarrierKeys:
+    """Keys are carried as raw (2,) uint32 so they cross shard_map / pallas
+    boundaries as plain arrays."""
+    if hasattr(root_key, "dtype") and jnp.issubdtype(root_key.dtype, jnp.uint32):
+        root_key = jax.random.wrap_key_data(root_key)
+    k = jax.random.fold_in(root_key, step)
+    kr, kx, kc = jax.random.split(k, 3)
+    raw = jax.random.key_data
+    return BarrierKeys(raw(kr).astype(jnp.uint32), raw(kx).astype(jnp.uint32),
+                       raw(kc).astype(jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Per-silo gradient with the configured clipping granularity
+
+
+def silo_grad(loss_fn, params, batch_local, priv: PrivacyConfig, clip_bound):
+    """Returns (clipped_grad_sum_or_silo_grad, norms, loss). Called per-silo
+    (inside shard_map) or per-microbatch-vmap (fused path)."""
+    if not priv.enabled:
+        loss, g = jax.value_and_grad(loss_fn)(params, batch_local)
+        return g, clipping.global_norm(g)[None], loss
+    if priv.clip_mode == "per_example":
+        g, norms, loss = clipping.per_example_clipped_grad(
+            loss_fn, params, batch_local, clip_bound)
+        return g, norms, loss
+    if priv.clip_mode == "per_microbatch":
+        g, norms, loss = clipping.per_microbatch_clipped_grad(
+            loss_fn, params, batch_local, clip_bound, n_micro=4)
+        return g, norms, loss
+    # per_silo: one clipped contribution per silo
+    loss, g = jax.value_and_grad(loss_fn)(params, batch_local)
+    g, norm = clipping.clip_tree(g, clip_bound)
+    return g, norm[None], loss
+
+
+# ---------------------------------------------------------------------------
+# Dynamic clipping bound (§4.3) — in-graph admin protocol
+
+
+def dynamic_bound_from_percentiles(percentiles_all, priv: PrivacyConfig, key):
+    """percentiles_all: (n_silos, n_pct). Returns the (noisy) r-th percentile
+    bound, capped (§4.3)."""
+    return clipping.select_clip_bound(
+        percentiles_all, priv.clip_percentile, key,
+        dp_noise_scale=0.05 * priv.clip_bound,
+        upper_bound=priv.clip_percentile_max)
+
+
+# ---------------------------------------------------------------------------
+# Barrier path (inside shard_map over the silo axes)
+
+
+def barrier_sync(g, silo, n_silos: int, priv: PrivacyConfig, keys: BarrierKeys,
+                 noise_state: NoiseState, clip_bound, axis_names=("pod", "data")):
+    """Per-silo: mask; all: psum over silo axes. Returns the aggregate
+    (sum g_i + sigma*C*(xi_t - lam*xi_{t-1})) and the new noise state."""
+    sigma_c = priv.sigma * clip_bound
+    if priv.mask_mode == "pairwise":
+        masked = masking.pairwise_mask_tree(
+            g, keys.key_r, keys.key_xi, silo, n_silos,
+            sigma_c, priv.mask_scale * sigma_c)
+        if priv.noise_lambda > 0.0:
+            prev = masking.pairwise_mask_only(
+                g, keys.key_r, noise_state.prev_key, silo, n_silos,
+                sigma_c, 0.0)
+            gate = jnp.where(noise_state.has_prev, priv.noise_lambda, 0.0)
+            masked = jax.tree.map(
+                lambda m, p: m - gate * p.astype(m.dtype), masked, prev)
+    elif priv.mask_mode == "none":
+        masked = g
+    else:
+        raise ValueError(f"barrier path supports pairwise|none, got {priv.mask_mode}")
+    agg = jax.lax.psum(masked, axis_names)
+    new_state = NoiseState(prev_key=masking._raw(keys.key_xi),
+                           has_prev=jnp.ones((), jnp.bool_))
+    return agg, new_state
+
+
+# ---------------------------------------------------------------------------
+# Fused path (post-reduce aggregate noise under pjit)
+
+
+def fused_noise(g_sum, priv: PrivacyConfig, keys: BarrierKeys,
+                noise_state: NoiseState, clip_bound):
+    """g_sum: already-aggregated clipped gradient sum. Adds corrected DP noise
+    xi_t - lam*xi_{t-1} at scale sigma*C."""
+    sigma_c = priv.sigma * clip_bound
+    noise, new_state = noise_correction.corrected_noise(
+        g_sum, keys.key_xi, noise_state, sigma_c, priv.noise_lambda)
+    noisy = jax.tree.map(lambda g, n: (g.astype(jnp.float32) + n).astype(g.dtype),
+                         g_sum, noise)
+    return noisy, new_state
+
+
+def aggregate_noise_from_streams(template, keys: BarrierKeys, n_silos: int,
+                                 sigma_c):
+    """Test helper: the exact sum of the pairwise path's noise streams
+    (sum_i sigma_c/sqrt(n) xi_i; r-terms telescope to zero). Bit-matches the
+    barrier path aggregate noise."""
+    total = None
+    for i in range(n_silos):
+        m = masking.pairwise_mask_only(template, keys.key_r, keys.key_xi,
+                                       i, n_silos, sigma_c, 0.0)
+        total = m if total is None else jax.tree.map(jnp.add, total, m)
+    return total

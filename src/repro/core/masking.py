@@ -1,0 +1,124 @@
+"""Zero-sum DP masking (paper §4.2) over gradient pytrees.
+
+Two constructions, numerically interchangeable in aggregate:
+
+* ``admin`` (paper-faithful): the admin draws u_1..u_{n-1} iid wide-spread
+  noise and sets m_n = xi - sum(u_i), with xi ~ N(0, (sigma*C)^2 I). Masks are
+  O(P) tensors the admin must ship to each silo every step.
+* ``pairwise`` (beyond-paper, DESIGN.md §2): m_i = B(r_i - r_{(i+1) mod n})
+  + xi_i with xi_i ~ N(0, (sigma*C)^2/n I), all streams derived from 32-byte
+  per-step keys. Telescoping gives sum_i m_i = xi exactly; each silo only
+  needs its subkeys. The fused kernel (kernels/zsmask) regenerates masks in
+  VMEM so they never touch HBM.
+
+Both satisfy the paper's three properties: (1) aggregate == DP-SGD noise,
+(2) each masked gradient is marginally wide-spread noise, (3) collusion of
+n-1 owners still leaves g_i + xi on the honest silo.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.zsmask import ops as zs_ops
+
+
+def _raw(key: jax.Array) -> jax.Array:
+    """(2,) uint32 view of a jax PRNG key."""
+    if hasattr(key, "dtype") and jnp.issubdtype(key.dtype, jnp.uint32):
+        return key
+    return jax.random.key_data(key).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Pairwise masks (key-derived, zero distribution traffic)
+
+
+def pairwise_mask_tree(grads, key_r, key_xi, silo, n_silos: int, sigma_c,
+                       b_scale: float, impl: str = "auto"):
+    """Apply m_silo to every leaf of ``grads`` (flattened per leaf).
+    silo may be a traced scalar (lax.axis_index); keys are per-step."""
+    kr = _raw(key_r)
+    kx = _raw(key_xi)
+    leaves, treedef = jax.tree.flatten(grads)
+    out = []
+    for i, g in enumerate(leaves):
+        # per-leaf independent streams: fold the leaf index into the keys
+        kr_i = kr + jnp.uint32(0x9E3779B9) * jnp.uint32(i + 1)
+        kx_i = kx + jnp.uint32(0x85EBCA6B) * jnp.uint32(i + 1)
+        flat = g.reshape(-1)
+        masked = zs_ops.apply_zsmask(flat, kr_i, kx_i, silo, n_silos,
+                                     sigma_c, b_scale, impl=impl)
+        out.append(masked.reshape(g.shape).astype(g.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def pairwise_mask_only(shapes_tree, key_r, key_xi, silo, n_silos: int,
+                       sigma_c, b_scale: float, impl: str = "jnp"):
+    zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), shapes_tree)
+    return pairwise_mask_tree(zeros, key_r, key_xi, silo, n_silos, sigma_c,
+                              b_scale, impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# Admin-generated masks (paper-faithful wire protocol)
+
+
+def admin_masks(key: jax.Array, template, n_silos: int, sigma_c, b_scale: float):
+    """Generate the full set of n masks (stacked on a leading silo axis) such
+    that sum_i m_i = xi ~ N(0, sigma_c^2 I). This is the O(n * P) object the
+    paper's admin distributes; kept for the faithful baseline + tests."""
+    ku, kxi = jax.random.split(key)
+
+    def per_leaf(ku, kxi, leaf):
+        u = jax.random.normal(ku, (n_silos - 1,) + leaf.shape, jnp.float32) * b_scale
+        xi = jax.random.normal(kxi, leaf.shape, jnp.float32) * sigma_c
+        last = xi - jnp.sum(u, axis=0)
+        return jnp.concatenate([u, last[None]], axis=0)
+
+    leaves, treedef = jax.tree.flatten(template)
+    kus = jax.random.split(ku, len(leaves))
+    kxis = jax.random.split(kxi, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [per_leaf(a, b, l) for a, b, l in zip(kus, kxis, leaves)])
+
+
+def apply_admin_mask(grads, masks, silo: int):
+    """Silo-side: g_i + m_i (mask row ``silo`` of the stacked masks)."""
+    return jax.tree.map(
+        lambda g, m: (g.astype(jnp.float32) + m[silo]).astype(g.dtype),
+        grads, masks)
+
+
+# ---------------------------------------------------------------------------
+# Integer-ring masking (exact cancellation; composes with int8 compression)
+
+RING_SCALE_BITS = 16
+
+
+def to_ring(x: jax.Array, clip: float) -> jax.Array:
+    """Quantize fp values in [-clip, clip] to int32 fixed point."""
+    scale = (1 << RING_SCALE_BITS) / clip
+    return jnp.round(jnp.clip(x, -clip, clip) * scale).astype(jnp.int32)
+
+
+def from_ring(x: jax.Array, clip: float) -> jax.Array:
+    scale = (1 << RING_SCALE_BITS) / clip
+    return x.astype(jnp.float32) / scale
+
+
+def ring_mask_tree(grads_int, key, silo, n_silos: int):
+    """Pairwise telescoping masks drawn uniformly from the int32 ring: the sum
+    over silos wraps to exactly zero (no fp cancellation error). DP noise is
+    added separately (fp) after aggregation on this path."""
+    kr = _raw(key)
+    leaves, treedef = jax.tree.flatten(grads_int)
+    out = []
+    for i, g in enumerate(leaves):
+        ki = jax.random.wrap_key_data(kr + jnp.uint32(0x9E3779B9) * jnp.uint32(i + 1))
+        nxt = (silo + 1) % n_silos
+        r_i = jax.random.bits(jax.random.fold_in(ki, silo), g.shape, jnp.uint32)
+        r_n = jax.random.bits(jax.random.fold_in(ki, nxt), g.shape, jnp.uint32)
+        mask = (r_i - r_n).astype(jnp.int32)  # wraps mod 2^32
+        out.append(g + mask)
+    return jax.tree.unflatten(treedef, out)

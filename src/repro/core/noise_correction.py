@@ -1,0 +1,66 @@
+"""DP noise correction (paper §4.4, Appendix A).
+
+Noise added at step t is  xi_t - lambda * xi_{t-1}  with per-step scale
+sigma = sigma_tilde / (1 - lambda); the final model matches plain DP-GD at
+sigma_tilde (Thm. 1) while individual updates get the stronger Eq. 14
+protection.
+
+Beyond-paper optimization (DESIGN.md §2): instead of storing xi_{t-1} (an
+O(P) tensor in the admin TEE), we carry only the previous step's PRNG *key*
+in the optimizer state and regenerate lambda*xi_{t-1} on the fly — O(1)
+state, fuses into the same elementwise pass.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class NoiseState(NamedTuple):
+    prev_key: jax.Array  # raw (2,) uint32 key data that generated xi_{t-1}
+    has_prev: jax.Array  # bool scalar (first step has no xi_{t-1})
+
+
+def _raw(key) -> jax.Array:
+    if hasattr(key, "dtype") and jnp.issubdtype(key.dtype, jnp.uint32):
+        return key
+    return jax.random.key_data(key).astype(jnp.uint32)
+
+
+def _typed(key) -> jax.Array:
+    if hasattr(key, "dtype") and jnp.issubdtype(key.dtype, jnp.uint32):
+        return jax.random.wrap_key_data(key)
+    return key
+
+
+def init_state(key) -> NoiseState:
+    return NoiseState(prev_key=_raw(key), has_prev=jnp.zeros((), jnp.bool_))
+
+
+def _noise_like(key, tree, scale):
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(_typed(key), len(leaves))
+    return jax.tree.unflatten(
+        treedef,
+        [jax.random.normal(k, g.shape, jnp.float32) * scale
+         for k, g in zip(keys, leaves)])
+
+
+def corrected_noise(tree_template, key_t, state: NoiseState, sigma_c, lam: float):
+    """Returns (noise_tree = xi_t - lam*xi_{t-1}, new_state). xi_* have std
+    sigma_c (= sigma*C, where sigma = sigma_tilde/(1-lam))."""
+    xi_t = _noise_like(key_t, tree_template, sigma_c)
+    new_state = NoiseState(prev_key=_raw(key_t), has_prev=jnp.ones((), jnp.bool_))
+    if lam == 0.0:
+        return xi_t, new_state
+    xi_prev = _noise_like(state.prev_key, tree_template, sigma_c)
+    gate = jnp.where(state.has_prev, lam, 0.0)
+    noise = jax.tree.map(lambda a, b: a - gate * b, xi_t, xi_prev)
+    return noise, new_state
+
+
+def effective_sigma(sigma_tilde: float, lam: float) -> float:
+    """Per-step noise scale that keeps the Thm.-1 guarantee at sigma_tilde."""
+    return sigma_tilde / (1.0 - lam)

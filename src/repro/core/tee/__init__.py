@@ -1,0 +1,1 @@
+from repro.core.tee import attestation, channels, components, kds, sandbox  # noqa: F401

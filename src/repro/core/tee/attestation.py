@@ -1,0 +1,96 @@
+"""Remote-attestation protocol simulation (paper §6, Fig. 4).
+
+TPUs have no architectural enclave (DESIGN.md §3); what transfers from the
+paper is the *protocol*: measured components, an attestation report binding
+measurements + policy, and key release gated on verification. The root of
+trust here is software (clearly labeled SIMULATION) — the message flow,
+measurement discipline and failure modes are the paper's.
+
+Measurement = SHA-256 over the component's code (source bytes of the modules
+it declares) + its launch configuration — the analogue of measured direct
+boot (kernel/initrd/cmdline hashes in the virtual firmware) + the HOSTDATA
+policy hash.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import hmac
+import inspect
+import json
+from dataclasses import dataclass, field
+from typing import Any
+
+SIMULATION_NOTICE = "SIMULATED-TEE (software root of trust; protocol-faithful)"
+
+
+def measure_modules(modules) -> str:
+    """Cryptographic measurement of the service code (open-sourced in the
+    paper so all actors can reproduce the expected value)."""
+    h = hashlib.sha256()
+    for mod in modules:
+        try:
+            src = inspect.getsource(mod)
+        except (OSError, TypeError):
+            src = repr(mod)
+        h.update(src.encode())
+    return h.hexdigest()
+
+
+def measure_config(cfg: Any) -> str:
+    if dataclasses.is_dataclass(cfg):
+        cfg = dataclasses.asdict(cfg)
+    return hashlib.sha256(
+        json.dumps(cfg, sort_keys=True, default=str).encode()).hexdigest()
+
+
+@dataclass(frozen=True)
+class AttestationReport:
+    """The CVM attestation-report analogue: code measurement (firmware+
+    kernel+initrd equivalent), policy hash (HOSTDATA field), component role,
+    and a signature by the (simulated) hardware root key."""
+    component: str
+    code_measurement: str
+    policy_hash: str
+    nonce: str
+    signature: str = ""
+
+    def payload(self) -> bytes:
+        return json.dumps({
+            "component": self.component,
+            "code_measurement": self.code_measurement,
+            "policy_hash": self.policy_hash,
+            "nonce": self.nonce,
+        }, sort_keys=True).encode()
+
+
+class AttestationService:
+    """The TEE vendor / cloud attestation service: signs reports with the
+    hardware root key and verifies them for relying parties (the KDS)."""
+
+    def __init__(self, root_key: bytes = b"simulated-hardware-root-key"):
+        self._root_key = root_key
+        self.notice = SIMULATION_NOTICE
+
+    def issue(self, component: str, code_measurement: str, policy_hash: str,
+              nonce: str) -> AttestationReport:
+        r = AttestationReport(component, code_measurement, policy_hash, nonce)
+        sig = hmac.new(self._root_key, r.payload(), hashlib.sha256).hexdigest()
+        return dataclasses.replace(r, signature=sig)
+
+    def verify(self, report: AttestationReport) -> bool:
+        expect = hmac.new(self._root_key, report.payload(), hashlib.sha256).hexdigest()
+        return hmac.compare_digest(expect, report.signature)
+
+
+@dataclass
+class LaunchPolicy:
+    """Runtime access policy (paper §6.2): management interfaces removed, only
+    the protocol RPCs exposed; the policy hash is bound into the report."""
+    allowed_rpcs: tuple = ("register", "get_mask_keys", "submit_update",
+                           "get_model", "heartbeat")
+    exec_process: bool = False  # ExecProcessRequest=false (no kubectl exec)
+    network_egress: tuple = ()  # empty: only in-protocol channels
+
+    def hash(self) -> str:
+        return measure_config(dataclasses.asdict(self))

@@ -1,0 +1,74 @@
+"""Authenticated encryption for component-to-component payloads
+(encryption-in-transit) and for assets at rest (encryption-at-rest).
+
+SIMULATION: stream cipher = SHA-256 keystream in counter mode + HMAC-SHA256
+(encrypt-then-MAC), implemented with hashlib only (no crypto library in the
+container). The construction is sound in structure (unique nonce per message,
+key separation between enc/mac, MAC over nonce||ciphertext) but NOT intended
+as production crypto — a deployment swaps in AES-GCM. The protocol-level
+properties the paper needs (confidentiality + integrity + replay rejection
+via monotone counters) are all enforced and tested.
+"""
+from __future__ import annotations
+
+import hashlib
+import hmac
+import os
+import struct
+from dataclasses import dataclass
+
+
+def _keystream(key: bytes, nonce: bytes, n: int) -> bytes:
+    out = bytearray()
+    counter = 0
+    while len(out) < n:
+        out += hashlib.sha256(key + nonce + struct.pack("<Q", counter)).digest()
+        counter += 1
+    return bytes(out[:n])
+
+
+def derive_key(master: bytes, label: str) -> bytes:
+    return hmac.new(master, label.encode(), hashlib.sha256).digest()
+
+
+def seal(key: bytes, plaintext: bytes, aad: bytes = b"") -> bytes:
+    enc_key = derive_key(key, "enc")
+    mac_key = derive_key(key, "mac")
+    nonce = os.urandom(16)
+    ct = bytes(a ^ b for a, b in zip(plaintext, _keystream(enc_key, nonce, len(plaintext))))
+    tag = hmac.new(mac_key, nonce + aad + ct, hashlib.sha256).digest()
+    return nonce + tag + ct
+
+
+def open_sealed(key: bytes, blob: bytes, aad: bytes = b"") -> bytes:
+    enc_key = derive_key(key, "enc")
+    mac_key = derive_key(key, "mac")
+    nonce, tag, ct = blob[:16], blob[16:48], blob[48:]
+    expect = hmac.new(mac_key, nonce + aad + ct, hashlib.sha256).digest()
+    if not hmac.compare_digest(expect, tag):
+        raise ValueError("authentication failed (tampered or wrong key)")
+    return bytes(a ^ b for a, b in zip(ct, _keystream(enc_key, nonce, len(ct))))
+
+
+@dataclass
+class SecureChannel:
+    """Replay-protected duplex channel between two attested components."""
+    key: bytes
+    peer: str
+    _send_ctr: int = 0
+    _recv_ctr: int = -1
+
+    def send(self, payload: bytes) -> bytes:
+        aad = f"{self.peer}:{self._send_ctr}".encode()
+        blob = struct.pack("<Q", self._send_ctr) + seal(self.key, payload, aad)
+        self._send_ctr += 1
+        return blob
+
+    def recv(self, blob: bytes) -> bytes:
+        ctr = struct.unpack("<Q", blob[:8])[0]
+        if ctr <= self._recv_ctr:
+            raise ValueError(f"replayed message (ctr {ctr} <= {self._recv_ctr})")
+        aad = f"{self.peer}:{ctr}".encode()
+        out = open_sealed(self.key, blob[8:], aad)
+        self._recv_ctr = ctr
+        return out

@@ -1,0 +1,170 @@
+"""The CITADEL++ component protocol (paper §3.2-3.3), run end-to-end
+in-process: management service, KDS, admin / data-handling / model-updating
+components, each in its own simulated trust domain.
+
+This is the *wire-protocol* tier (small/paper models; serialized, encrypted
+payloads between components). The SPMD tier (distributed/steps.py) implements
+the same math in one jitted graph for pod-scale runs; tests assert the two
+tiers agree.
+
+Workflow (paper Fig. 1):
+  1. owners encrypt assets -> untrusted storage
+  2-3. owners attest KDS, upload keys + training config
+  4-5. management service deploys components (admin, updater, handlers)
+  6-7. components register, fetch encrypted assets, attest to KDS, get keys
+  loop: admin distributes per-step mask keys -> handlers compute clipped,
+        DP-masked gradients (model-owner code inside the sandbox) -> updater
+        aggregates (sees only masked updates) -> admin advances
+"""
+from __future__ import annotations
+
+import io
+import pickle
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import PrivacyConfig
+from repro.core import clipping, masking
+from repro.core.accountant import PrivacyAccountant
+from repro.core.barrier import BarrierKeys, step_keys
+from repro.core.tee.attestation import (AttestationService, LaunchPolicy,
+                                        measure_config, measure_modules)
+from repro.core.tee.channels import SecureChannel, derive_key, open_sealed, seal
+from repro.core.tee.kds import KeyDistributionService
+from repro.core.tee.sandbox import Sandbox
+
+
+def _ser(tree) -> bytes:
+    buf = io.BytesIO()
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    np.savez(buf, *[np.asarray(x) for x in flat])
+    return pickle.dumps((buf.getvalue(), treedef))
+
+
+def _deser(blob: bytes):
+    data, treedef = pickle.loads(blob)
+    with np.load(io.BytesIO(data)) as z:
+        flat = [z[k] for k in z.files]
+    return jax.tree_util.tree_unflatten(treedef, [jnp.asarray(x) for x in flat])
+
+
+# ---------------------------------------------------------------------------
+# Untrusted storage (everything at rest is encrypted)
+
+
+class UntrustedStorage:
+    def __init__(self):
+        self.blobs: dict[str, bytes] = {}
+
+    def put(self, asset_id: str, blob: bytes):
+        self.blobs[asset_id] = blob
+
+    def get(self, asset_id: str) -> bytes:
+        return self.blobs[asset_id]
+
+
+# ---------------------------------------------------------------------------
+# Components
+
+
+@dataclass
+class Component:
+    name: str
+    service: "ManagementService"
+    report: object = None
+
+    def attest(self, policy: LaunchPolicy):
+        import repro.core.barrier as _b
+        import repro.core.clipping as _c
+        import repro.core.masking as _m
+        measurement = measure_modules([_b, _c, _m])
+        self.report = self.service.attestation.issue(
+            self.name, measurement, policy.hash(), nonce=self.name + "-n0")
+        return self.report
+
+
+@dataclass
+class DataHandler(Component):
+    """One per dataset owner: runs the model owner's (sandboxed) data-handling
+    code on the silo's data; emits encrypted, clipped, DP-masked updates."""
+    silo_idx: int = 0
+    data: Optional[dict] = None
+    sandbox: Sandbox = field(default_factory=Sandbox)
+    channel: Optional[SecureChannel] = None
+
+    def compute_update(self, params_blob: bytes, grad_fn: Callable,
+                       priv: PrivacyConfig, keys: BarrierKeys, n_silos: int,
+                       clip_bound: float) -> bytes:
+        params = _deser(params_blob)
+        # untrusted model-owner code inside the sandbox (R1/R2)
+        loss, grads = self.sandbox.run(grad_fn, params, self.data)
+        grads, norm = clipping.clip_tree(grads, clip_bound)
+        sigma_c = priv.sigma * clip_bound
+        masked = masking.pairwise_mask_tree(
+            grads, keys.key_r, keys.key_xi, self.silo_idx, n_silos,
+            sigma_c, priv.mask_scale * sigma_c, impl="jnp")
+        payload = _ser({"update": masked, "loss": jnp.asarray(loss),
+                        "norm": norm})
+        return self.channel.send(payload)
+
+
+@dataclass
+class ModelUpdater(Component):
+    """Single component for the model owner: aggregates masked updates and
+    applies the (sandboxed) model-updating code. Never sees raw gradients."""
+    channels: dict = field(default_factory=dict)
+    received_updates: list = field(default_factory=list)
+
+    def aggregate(self, blobs: dict, params, update_fn: Callable, lr: float,
+                  n_silos: int):
+        total = None
+        losses = []
+        for silo, blob in blobs.items():
+            payload = _deser(self.channels[silo].recv(blob))
+            self.received_updates.append(
+                jax.tree.map(np.asarray, payload["update"]))
+            losses.append(float(payload["loss"]))
+            total = payload["update"] if total is None else jax.tree.map(
+                lambda a, b: a + b.astype(a.dtype), total, payload["update"])
+        mean_update = jax.tree.map(lambda g: g / n_silos, total)
+        new_params = update_fn(params, mean_update, lr)
+        return new_params, float(np.mean(losses))
+
+
+@dataclass
+class Admin(Component):
+    """Coordinates iterations and owns the per-step mask/noise keys (32 bytes
+    per step — the whole of the 'mask distribution' on the pairwise path)."""
+    root_key: Optional[jax.Array] = None
+    accountant: Optional[PrivacyAccountant] = None
+
+    def keys_for_step(self, step: int) -> BarrierKeys:
+        return step_keys(self.root_key, jnp.asarray(step))
+
+
+class ManagementService:
+    """Sets up a training session and tracks metadata (paper §3.2)."""
+
+    def __init__(self):
+        self.attestation = AttestationService()
+        self.kds = KeyDistributionService(self.attestation)
+        self.storage = UntrustedStorage()
+        self.policy = LaunchPolicy()
+        self.sessions: dict[str, dict] = {}
+
+    def expected_measurement(self) -> str:
+        import repro.core.barrier as _b
+        import repro.core.clipping as _c
+        import repro.core.masking as _m
+        return measure_modules([_b, _c, _m])
+
+    def create_session(self, session_id: str, n_silos: int,
+                       priv: PrivacyConfig) -> dict:
+        s = {"id": session_id, "n_silos": n_silos, "priv": priv,
+             "progress": 0, "components": {}}
+        self.sessions[session_id] = s
+        return s

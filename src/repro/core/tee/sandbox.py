@@ -1,0 +1,83 @@
+"""Sandboxing of untrusted model-owner code (paper §5).
+
+The paper restricts the (confidential, potentially malicious) data-handling
+code via Linux namespaces: R1 network isolation, R2 resource isolation, fresh
+process per iteration. Kernel namespaces don't transfer to this runtime; the
+enforced equivalents are:
+
+  * a *pure-function contract*: the untrusted code runs under a restricted
+    builder that denies I/O capabilities (no file handles, no sockets, no os/
+    subprocess/builtins-open access) — R1/R2's "only channel is the service
+    code" property;
+  * *fresh state per iteration*: the callable gets no writable globals and
+    receives only this iteration's batch + model params — the paper's
+    spawn-per-iteration state-isolation argument;
+  * *structural data-flow regulation*: in the jitted graph the only cross-
+    silo edge is the masked psum (distributed/steps.py), so even adversarial
+    jax code inside the loss cannot route raw gradients around the barrier —
+    it can only change what gets clipped and masked.
+
+This is a policy object + execution harness, not an OS boundary; the OS
+boundary in a deployment comes from the cluster layer. Tested in
+tests/test_tee.py (escape attempts raise).
+"""
+from __future__ import annotations
+
+import builtins
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+_DENIED_BUILTINS = ("open", "exec", "eval", "compile", "input", "__import__")
+_DENIED_MODULES = ("os", "sys", "subprocess", "socket", "shutil", "pathlib",
+                   "urllib", "http", "requests")
+
+
+class SandboxViolation(RuntimeError):
+    pass
+
+
+def _denied(name):
+    def fn(*a, **k):
+        raise SandboxViolation(f"sandbox denies {name!r} (R1/R2 isolation)")
+    return fn
+
+
+@dataclass
+class Sandbox:
+    """Executes untrusted data-handling code under the capability policy."""
+    allow_modules: tuple = ("jax", "jax.numpy", "numpy", "math", "functools")
+    violations: list = field(default_factory=list)
+
+    def guarded_import(self, name, *args, **kwargs):
+        root = name.split(".")[0]
+        if root in _DENIED_MODULES:
+            self.violations.append(name)
+            raise SandboxViolation(f"import of {name!r} denied inside sandbox")
+        return _REAL_IMPORT(name, *args, **kwargs)
+
+    def _restricted_builtins(self) -> dict:
+        ns = dict(vars(builtins))
+        for name in _DENIED_BUILTINS:
+            ns[name] = _denied(name)
+        ns["__import__"] = self.guarded_import
+        return ns
+
+    def run(self, fn: Callable, *args: Any, **kwargs: Any) -> Any:
+        """Run ``fn`` under denied I/O capabilities. CPython binds a
+        function's builtins at *creation* time, so the callable is rebuilt
+        with a fresh globals dict carrying the restricted builtins (this is
+        also the fresh-state-per-iteration analogue: no writable module
+        globals survive between runs)."""
+        import types
+        g = getattr(fn, "__globals__", None)
+        if g is None:  # builtin / C callable: nothing to capture
+            return fn(*args, **kwargs)
+        sandbox_globals = dict(g)
+        sandbox_globals["__builtins__"] = self._restricted_builtins()
+        boxed = types.FunctionType(fn.__code__, sandbox_globals,
+                                   fn.__name__, fn.__defaults__, fn.__closure__)
+        boxed.__kwdefaults__ = getattr(fn, "__kwdefaults__", None)
+        return boxed(*args, **kwargs)
+
+
+_REAL_IMPORT = builtins.__import__

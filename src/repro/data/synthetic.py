@@ -1,0 +1,83 @@
+"""Synthetic datasets (offline container: no real MNIST/CIFAR download).
+
+The classification datasets are *learnable* mixtures-of-prototypes so the
+paper's utility-vs-epsilon curves are reproducible in shape: each class has a
+few prototype patterns; samples are prototypes + Gaussian pixel noise. LM
+data is a token stream from a mixture of Markov chains (so next-token loss is
+learnable below the uniform entropy floor).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class ArrayDataset:
+    x: np.ndarray
+    y: np.ndarray
+
+    def __len__(self):
+        return len(self.x)
+
+    def split(self, n_parts: int) -> list["ArrayDataset"]:
+        """Partition across dataset owners (silos)."""
+        xs = np.array_split(self.x, n_parts)
+        ys = np.array_split(self.y, n_parts)
+        return [ArrayDataset(a, b) for a, b in zip(xs, ys)]
+
+
+def synthetic_images(n: int, hw: int, channels: int, n_classes: int,
+                     seed: int = 0, noise: float = 0.35,
+                     prototypes_per_class: int = 3) -> ArrayDataset:
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(0.0, 1.0, (n_classes, prototypes_per_class, hw, hw, channels))
+    y = rng.integers(0, n_classes, n)
+    pick = rng.integers(0, prototypes_per_class, n)
+    x = protos[y, pick] + rng.normal(0.0, noise, (n, hw, hw, channels))
+    return ArrayDataset(x.astype(np.float32), y.astype(np.int32))
+
+
+def synthetic_mnist(n_train: int = 8192, n_test: int = 2048, seed: int = 0):
+    tr = synthetic_images(n_train, 28, 1, 10, seed)
+    te = synthetic_images(n_test, 28, 1, 10, seed + 1)
+    # same prototypes for train/test: regenerate test from train prototypes
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(0.0, 1.0, (10, 3, 28, 28, 1))
+    rng2 = np.random.default_rng(seed + 1000)
+    y = rng2.integers(0, 10, n_test)
+    pick = rng2.integers(0, 3, n_test)
+    te = ArrayDataset((protos[y, pick] + rng2.normal(0, 0.35, (n_test, 28, 28, 1))).astype(np.float32),
+                      y.astype(np.int32))
+    return tr, te
+
+
+def synthetic_cifar10(n_train: int = 8192, n_test: int = 2048, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(0.0, 1.0, (10, 3, 32, 32, 3))
+
+    def make(n, s):
+        r = np.random.default_rng(s)
+        y = r.integers(0, 10, n)
+        pick = r.integers(0, 3, n)
+        x = protos[y, pick] + r.normal(0, 0.35, (n, 32, 32, 3))
+        return ArrayDataset(x.astype(np.float32), y.astype(np.int32))
+
+    return make(n_train, seed + 1), make(n_test, seed + 2)
+
+
+def synthetic_tokens(n_seqs: int, seq_len: int, vocab: int, seed: int = 0,
+                     n_chains: int = 4) -> np.ndarray:
+    """Mixture of order-1 Markov chains over a small effective vocabulary."""
+    rng = np.random.default_rng(seed)
+    eff = min(vocab, 256)
+    trans = rng.dirichlet(np.ones(eff) * 0.05, (n_chains, eff))
+    out = np.zeros((n_seqs, seq_len + 1), np.int32)
+    for i in range(n_seqs):
+        c = rng.integers(0, n_chains)
+        t = rng.integers(0, eff)
+        for j in range(seq_len + 1):
+            out[i, j] = t
+            t = rng.choice(eff, p=trans[c, t])
+    return out

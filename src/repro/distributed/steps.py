@@ -1,0 +1,319 @@
+"""Train / serve step builders: CITADEL++'s collaborative-training protocol
+mapped onto the TPU mesh (DESIGN.md §2).
+
+``sync_path='fused'``   — pjit end-to-end. Per-silo clipping via vmap over the
+    silo axis of the batch, aggregate corrected DP noise injected post-reduce.
+    Supports FSDP param sharding. Production path.
+
+``sync_path='barrier'`` — paper-faithful wire protocol: jax.shard_map manual
+    over the silo axes (pod, data), model/TP axis left auto. Each silo
+    computes its gradient, clips, applies its zero-sum DP-mask, and the
+    explicit psum is the aggregation the model updater sees. Params are
+    replicated across silos (the paper's FL memory model: every data-handling
+    component holds the full model replica).
+
+Both paths produce the same aggregate: sum_i clip(g_i) + sigma*C*(xi_t -
+lambda*xi_{t-1}), then update = aggregate / n_contributions via the optimizer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MeshConfig, PrivacyConfig, RunConfig
+from repro.core import barrier as barrier_mod
+from repro.core import clipping
+from repro.core.noise_correction import NoiseState, init_state as init_noise_state
+from repro.distributed.sharding_rules import (constrain as constrain_logical,
+                                               params_pspecs, spec_for)
+
+
+def constrain_tree(x, logical):
+    return constrain_logical(x, *logical)
+from repro.models.registry import Model
+from repro.optim.optimizers import Optimizer, make_optimizer
+from repro.optim.schedules import constant, warmup_cosine
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    noise_state: NoiseState
+    step: jax.Array
+    clip_bound: jax.Array  # current C_t (dynamic clipping carries it)
+
+
+def init_train_state(model: Model, run_cfg: RunConfig, key) -> TrainState:
+    params = model.init(key)
+    opt = make_optimizer(run_cfg.optimizer)
+    return TrainState(
+        params=params,
+        opt_state=opt.init(params),
+        noise_state=init_noise_state(jax.random.fold_in(key, 0xD0)),
+        step=jnp.zeros((), jnp.int32),
+        clip_bound=jnp.asarray(run_cfg.privacy.clip_bound, jnp.float32),
+    )
+
+
+def _reshape_to_silos(batch: dict, n_silos: int) -> dict:
+    out = {}
+    for k, v in batch.items():
+        if k == "positions" and v.ndim == 3:  # M-RoPE ids (3, B, S)
+            out[k] = v.reshape((3, n_silos, v.shape[1] // n_silos) + v.shape[2:]) \
+                      .transpose(1, 0, 2, 3)
+        else:
+            out[k] = v.reshape((n_silos, v.shape[0] // n_silos) + v.shape[1:])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fused path
+
+
+def _fused_grads(model: Model, priv: PrivacyConfig, params, batch, n_silos,
+                 keys, noise_state, clip_bound, clip_key):
+    """Per-silo clipped grads via vmap; aggregate noise post-reduce."""
+    silo_batches = _reshape_to_silos(batch, n_silos)
+
+    def per_silo(b):
+        loss, g = jax.value_and_grad(model.loss)(params, b)
+        return loss, g, clipping.global_norm(g)
+
+    losses, gs, norms = jax.vmap(per_silo)(silo_batches)
+
+    if priv.enabled and priv.dynamic_clip:
+        pcts = clipping.local_percentiles(norms)  # global view under pjit
+        clip_bound = barrier_mod.dynamic_bound_from_percentiles(
+            pcts[None], priv, clip_key)
+
+    if priv.enabled:
+        scale = jnp.minimum(1.0, clip_bound / jnp.maximum(norms, 1e-12))
+    else:
+        scale = jnp.ones_like(norms)
+    g_sum = jax.tree.map(
+        lambda g: jnp.tensordot(scale.astype(jnp.float32),
+                                g.astype(jnp.float32), axes=(0, 0)), gs)
+
+    if priv.enabled:
+        noisy, new_ns = barrier_mod.fused_noise(g_sum, priv, keys, noise_state,
+                                                clip_bound)
+    else:
+        noisy, new_ns = g_sum, noise_state
+    return noisy, jnp.mean(losses), norms, new_ns, clip_bound
+
+
+def _fused_grads_scan(model: Model, priv: PrivacyConfig, params, batch,
+                      n_silos, keys, noise_state, clip_bound, clip_key):
+    """Silo-serial fused path (100B-scale): silos are processed sequentially;
+    each silo's gradient is data-parallel over the whole mesh (FSDP
+    reduce-scatter keeps the transient at P/n_devices), clipped with the
+    carried bound C_{t} (derived from step t-1 norms), and accumulated into a
+    single fsdp-sharded fp32 buffer. Dynamic clipping is stale-by-one —
+    the standard production DP-SGD quantile scheme."""
+    silo_batches = _reshape_to_silos(batch, n_silos)
+    # inner batch dim stays sharded over the silo axes (the scan consumes dim0)
+    silo_batches = {
+        k: (constrain_tree(v, (None, None, "batch", None)) if k == "positions"
+            else constrain_tree(v, (None, "batch") + (None,) * (v.ndim - 2)))
+        for k, v in silo_batches.items()}
+
+    param_pspecs = params_pspecs(params)
+
+    def constrain_acc(t):
+        def one(x, s):
+            if all(e is None for e in s):
+                return x
+            return jax.lax.with_sharding_constraint(x, s)
+        return jax.tree.map(one, t, param_pspecs,
+                            is_leaf=lambda n: hasattr(n, "shape"))
+
+    acc0 = constrain_acc(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def body(carry, b):
+        acc, loss_acc = carry
+        loss, g = jax.value_and_grad(model.loss)(params, b)
+        norm = clipping.global_norm(g)
+        scale = jnp.minimum(1.0, clip_bound / jnp.maximum(norm, 1e-12)) \
+            if priv.enabled else jnp.asarray(1.0, jnp.float32)
+        acc = constrain_acc(jax.tree.map(
+            lambda a, gg: a + scale * gg.astype(jnp.float32), acc, g))
+        return (acc, loss_acc + loss), norm
+
+    (g_sum, loss_sum), norms = jax.lax.scan(body, (acc0, jnp.zeros((), jnp.float32)),
+                                            silo_batches)
+
+    if priv.enabled and priv.dynamic_clip:
+        pcts = clipping.local_percentiles(norms)
+        new_bound = barrier_mod.dynamic_bound_from_percentiles(
+            pcts[None], priv, clip_key)
+    else:
+        new_bound = clip_bound
+
+    if priv.enabled:
+        noisy, new_ns = barrier_mod.fused_noise(g_sum, priv, keys, noise_state,
+                                                clip_bound)
+    else:
+        noisy, new_ns = g_sum, noise_state
+    return noisy, loss_sum / n_silos, norms, new_ns, new_bound
+
+
+# ---------------------------------------------------------------------------
+# Barrier path (paper-faithful)
+
+
+def _barrier_grads(model: Model, priv: PrivacyConfig, mesh_cfg: MeshConfig,
+                   params, batch, keys, noise_state, clip_bound, clip_key,
+                   abstract_mesh):
+    n_silos = mesh_cfg.n_silos
+    silo_axes = mesh_cfg.silo_axes
+
+    def silo_fn(params, batch_local, key_r, key_xi, prev_key, has_prev,
+                clip_bound, clip_key):
+        idx = jnp.zeros((), jnp.int32)
+        mult = 1
+        for ax in reversed(silo_axes):
+            idx = idx + jax.lax.axis_index(ax) * mult
+            mult *= jax.lax.axis_size(ax)
+        loss, g = jax.value_and_grad(model.loss)(params, batch_local)
+        norm = clipping.global_norm(g)
+
+        if priv.dynamic_clip:
+            pcts = clipping.local_percentiles(norm[None])
+            all_pcts = jax.lax.all_gather(pcts, silo_axes)  # (n_silos, n_pct)
+            clip_bound = barrier_mod.dynamic_bound_from_percentiles(
+                all_pcts, priv, clip_key)
+
+        g, _ = clipping.clip_tree(g, clip_bound)
+        keys_t = barrier_mod.BarrierKeys(key_r, key_xi, clip_key)
+        ns = NoiseState(prev_key=prev_key, has_prev=has_prev)
+        agg, new_ns = barrier_mod.barrier_sync(
+            g, idx, n_silos, priv, keys_t, ns, clip_bound,
+            axis_names=silo_axes)
+        loss_mean = jax.lax.pmean(loss, silo_axes)
+        return agg, loss_mean, norm[None], new_ns.prev_key, new_ns.has_prev, clip_bound
+
+    batch_spec = {k: (P(None, silo_axes) if k == "positions" and v.ndim == 3
+                      else P(silo_axes))
+                  for k, v in batch.items()}
+
+    fn = jax.shard_map(
+        silo_fn,
+        mesh=abstract_mesh,
+        in_specs=(P(), batch_spec, P(), P(), P(), P(), P(), P()),
+        out_specs=(P(), P(), P(silo_axes), P(), P(), P()),
+        axis_names=set(silo_axes),
+        check_vma=False,
+    )
+    agg, loss, norms, prev_key, has_prev, new_bound = fn(
+        params, batch, keys.key_r, keys.key_xi, noise_state.prev_key,
+        noise_state.has_prev, clip_bound, keys.key_clip)
+    return agg, loss, norms, NoiseState(prev_key, has_prev), new_bound
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+
+
+def build_train_step(model: Model, run_cfg: RunConfig, abstract_mesh=None,
+                     lr_schedule=None):
+    priv = run_cfg.privacy
+    mesh_cfg = run_cfg.mesh
+    opt = make_optimizer(run_cfg.optimizer)
+    lr_schedule = lr_schedule or constant(run_cfg.optimizer.lr)
+    n_silos = mesh_cfg.n_silos
+
+    if priv.n_silos:
+        n_silos = priv.n_silos
+    elif priv.silo_mode == "scan":
+        n_silos = 4  # the paper's evaluation deploys 4 data-handling silos
+
+    def train_step(state: TrainState, batch, root_key):
+        keys = barrier_mod.step_keys(root_key, state.step)
+        if priv.sync_path == "barrier" and priv.enabled:
+            noisy, loss, norms, new_ns, bound = _barrier_grads(
+                model, priv, mesh_cfg, state.params, batch, keys,
+                state.noise_state, state.clip_bound, keys.key_clip,
+                abstract_mesh)
+        elif priv.silo_mode == "scan":
+            noisy, loss, norms, new_ns, bound = _fused_grads_scan(
+                model, priv, state.params, batch, n_silos, keys,
+                state.noise_state, state.clip_bound, keys.key_clip)
+        else:
+            noisy, loss, norms, new_ns, bound = _fused_grads(
+                model, priv, state.params, batch, n_silos, keys,
+                state.noise_state, state.clip_bound, keys.key_clip)
+
+        grad = jax.tree.map(lambda g: g / n_silos, noisy)
+        lr = lr_schedule(state.step)
+        new_params, new_opt = opt.update(state.params, state.opt_state, grad, lr)
+        metrics = {"loss": loss, "grad_norm_mean": jnp.mean(norms),
+                   "clip_bound": bound, "lr": lr}
+        return TrainState(new_params, new_opt, new_ns, state.step + 1, bound), metrics
+
+    return train_step
+
+
+def build_serve_step(model: Model, kind: str = "decode"):
+    if kind == "prefill":
+        def prefill_step(params, batch, cache):
+            return model.prefill(params, batch, cache)
+        return prefill_step
+
+    def decode_step(params, batch, cache):
+        return model.decode_step(params, batch, cache)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers for jit
+
+
+def state_pspecs(state: TrainState):
+    """PartitionSpecs for a TrainState under the current mesh context."""
+    p_specs = params_pspecs(state.params)
+    # opt entries mirror params: master/m/v share the params' sharding
+    def opt_spec(d):
+        out = {}
+        for k, v in d.items():
+            if k in ("master", "m", "v", "mu"):
+                out[k] = p_specs
+            else:
+                out[k] = jax.tree.map(lambda _: P(), v)
+        return out
+    return TrainState(
+        params=p_specs,
+        opt_state=opt_spec(state.opt_state),
+        noise_state=jax.tree.map(lambda _: P(), state.noise_state),
+        step=P(),
+        clip_bound=P(),
+    )
+
+
+def batch_pspec(batch, silo_axes=("pod", "data")):
+    """Shard the batch dim over the silo axes where divisible; batch=1 shapes
+    (long-context decode) fall back to sequence sharding / replication."""
+    mesh = jax.sharding.get_abstract_mesh()
+    n = 1
+    axes = tuple(a for a in silo_axes
+                 if mesh is not None and a in (mesh.axis_names or ()))
+    for a in axes:
+        n *= mesh.shape[a]
+    axes = axes or silo_axes
+
+    def one(k, v):
+        if k == "positions" and v.ndim == 3:
+            if v.shape[1] % max(n, 1) == 0 and v.shape[1] > 1:
+                return P(None, axes)
+            return P()
+        if v.shape[0] % max(n, 1) == 0 and v.shape[0] > 1:
+            return P(axes)
+        if v.ndim > 1 and v.shape[1] % max(n, 1) == 0 and v.shape[1] > 1:
+            return P(None, axes)  # sequence-sharded fallback
+        return P()
+
+    return {k: one(k, v) for k, v in batch.items()}

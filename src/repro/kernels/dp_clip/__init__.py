@@ -1,0 +1,1 @@
+from repro.kernels.dp_clip import ops, ref  # noqa: F401

@@ -1,0 +1,50 @@
+"""Public API for fused per-example clipping."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dp_clip import ref
+from repro.kernels.dp_clip.dp_clip import clip_accumulate, per_example_sumsq
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:
+        return False
+
+
+def _impl(impl: str) -> str:
+    return ("pallas" if _on_tpu() else "jnp") if impl == "auto" else impl
+
+
+def sumsq(g, impl: str = "auto"):
+    if _impl(impl) == "pallas":
+        return per_example_sumsq(g, interpret=not _on_tpu())
+    return ref.per_example_sumsq_ref(g)
+
+
+def clipped_sum(g, scale, impl: str = "auto"):
+    if _impl(impl) == "pallas":
+        return clip_accumulate(g, scale, interpret=not _on_tpu())
+    return ref.clip_accumulate_ref(g, scale)
+
+
+def clip_and_sum_tree(grads_tree, clip_bound, impl: str = "auto"):
+    """Per-example clip over a pytree of (B, ...) per-example grads, returning
+    the clipped *sum* tree + the per-example norms (for diagnostics).
+
+    Global per-example norm combines per-leaf partial sumsq (tiny host-side
+    reduce), then each leaf is scaled and reduced over B.
+    """
+    leaves = jax.tree.leaves(grads_tree)
+    B = leaves[0].shape[0]
+    flat = [g.reshape(B, -1) for g in leaves]
+    total = sum(sumsq(g, impl) for g in flat)
+    scale = ref.clip_scales(total, clip_bound)
+    summed = [clipped_sum(g, scale, impl) for g in flat]
+    out = jax.tree.unflatten(
+        jax.tree.structure(grads_tree),
+        [s.reshape(l.shape[1:]) for s, l in zip(summed, leaves)])
+    return out, jnp.sqrt(total)

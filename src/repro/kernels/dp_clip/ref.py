@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for fused per-example clipping (DP-SGD hot spot)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def per_example_sumsq_ref(g):
+    """g: (B, D) per-example grads (one flattened param block) -> (B,) fp32
+    partial squared norms."""
+    g32 = g.astype(jnp.float32)
+    return jnp.sum(g32 * g32, axis=1)
+
+
+def clip_accumulate_ref(g, scale):
+    """sum_b g[b] * scale[b]; g: (B, D), scale: (B,) -> (D,) fp32."""
+    return jnp.sum(g.astype(jnp.float32) * scale[:, None].astype(jnp.float32), axis=0)
+
+
+def clip_scales(sumsq_total, clip_bound):
+    """DP-SGD clip factor per example: min(1, C / ||g||)."""
+    norms = jnp.sqrt(jnp.maximum(sumsq_total, 1e-30))
+    return jnp.minimum(1.0, clip_bound / norms)

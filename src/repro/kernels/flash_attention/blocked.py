@@ -1,0 +1,143 @@
+"""Flash attention as a custom-VJP jnp implementation (the compiled path on
+non-TPU backends and the sharding-level reference for the Pallas kernel).
+
+Why custom VJP: differentiating a naive scan-over-KV-blocks makes JAX stack
+every block's probability matrix as scan residuals (O(S^2) HBM traffic and,
+under GSPMD, replicated buffers — measured 4x flops / 10x HBM blowup on the
+qwen2.5 train cell, see EXPERIMENTS.md §Perf). The flash backward recomputes
+p per block from (q, k, v, lse) instead — O(S) residuals, and every
+intermediate carries an explicit batch/head sharding constraint so SPMD never
+falls back to replication.
+
+GQA handling: KV heads are repeated up to the query head count *before* the
+kernel (Megatron/MaxText pattern) so the head dim shards over the full TP
+axis — with native grouped layout only Hkv-way TP is possible and GSPMD
+inserts per-block all-gathers of q (measured 23s -> collective-dominated on
+qwen2.5 kv=2/TP=16). The Pallas TPU kernel keeps native GQA indexing (no
+repeat) — repetition is an XLA-path trick only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding_rules import constrain
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k, hq: int):
+    """(B, S, Hkv, D) -> (B, S, Hq, D) by group repetition."""
+    B, S, Hkv, D = k.shape
+    if Hkv == hq:
+        return k
+    k = jnp.broadcast_to(k[:, :, :, None], (B, S, Hkv, hq // Hkv, D))
+    return k.reshape(B, S, hq, D)
+
+
+def _blocks(x, nk, block_k):
+    B = x.shape[0]
+    return x.reshape((B, nk, block_k) + x.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, x.ndim + 1)))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_xla(q, k, v, causal: bool = True, block_k: int = 512):
+    """q: (B,Sq,Hq,D); k,v: (B,Sk,Hkv,D) with Hkv | Hq. Returns (B,Sq,Hq,D)."""
+    out, _ = _fwd(q, k, v, causal, block_k)
+    return out
+
+
+def _cst(x):  # (B, S, H, D) activations: batch + head TP
+    return constrain(x, "batch", None, "heads", None)
+
+
+def _fwd(q, k, v, causal, block_k):
+    B, Sq, Hq, D = q.shape
+    Sk = k.shape[1]
+    block_k = min(block_k, Sk)
+    assert Sk % block_k == 0
+    nk = Sk // block_k
+    scale = 1.0 / (D ** 0.5)
+
+    qh = _cst(q.astype(jnp.float32))
+    kb = _blocks(_cst(repeat_kv(k, Hq).astype(jnp.float32)), nk, block_k)
+    vb = _blocks(_cst(repeat_kv(v, Hq).astype(jnp.float32)), nk, block_k)
+    qpos = jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kk, vv, j = inp  # (B, bk, Hq, D)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qh, kk) * scale
+        if causal:
+            kpos = j * block_k + jnp.arange(block_k)
+            s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = constrain(acc * alpha[..., None]
+                        + jnp.einsum("bhqk,bkhd->bhqd", p, vv),
+                        "batch", "heads", None, None)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hq, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hq, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, jnp.arange(nk)))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype), lse
+
+
+def _fwd_vjp(q, k, v, causal, block_k):
+    out, lse = _fwd(q, k, v, causal, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd_vjp(causal, block_k, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    block_k = min(block_k, Sk)
+    nk = Sk // block_k
+    scale = 1.0 / (D ** 0.5)
+
+    qh = _cst(q.astype(jnp.float32))
+    oh = _cst(out.astype(jnp.float32))
+    doh = _cst(dout.astype(jnp.float32))
+    delta = jnp.einsum("bqhd,bqhd->bhq", doh, oh)
+    kb = _blocks(_cst(repeat_kv(k, Hq).astype(jnp.float32)), nk, block_k)
+    vb = _blocks(_cst(repeat_kv(v, Hq).astype(jnp.float32)), nk, block_k)
+    qpos = jnp.arange(Sq)
+
+    def body(dq, inp):
+        kk, vv, j = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", qh, kk) * scale
+        if causal:
+            kpos = j * block_k + jnp.arange(block_k)
+            s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])  # (B,Hq,Sq,bk)
+        dp = jnp.einsum("bqhd,bkhd->bhqk", doh, vv)
+        ds = p * (dp - delta[..., None]) * scale
+        dv_j = jnp.einsum("bhqk,bqhd->bkhd", p, doh)
+        dk_j = jnp.einsum("bhqk,bqhd->bkhd", ds, qh)
+        dq = constrain(dq + jnp.einsum("bhqk,bkhd->bqhd", ds, kk),
+                       "batch", None, "heads", None)
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, Sq, Hq, D), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(body, dq0, (kb, vb, jnp.arange(nk)))
+    dk = dk_b.transpose(1, 0, 2, 3, 4).reshape(B, Sk, Hq, D)
+    dv = dv_b.transpose(1, 0, 2, 3, 4).reshape(B, Sk, Hq, D)
+    # fold repeated-head grads back to the Hkv heads
+    if G > 1:
+        dk = dk.reshape(B, Sk, Hkv, G, D).sum(axis=3)
+        dv = dv.reshape(B, Sk, Hkv, G, D).sum(axis=3)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention_xla.defvjp(_fwd_vjp, _bwd_vjp)

@@ -1,0 +1,32 @@
+"""Public fused-attention API: Pallas on TPU, jnp reference elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.blocked import flash_attention_xla
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:
+        return False
+
+
+def flash_attention(q, k, v, causal: bool = True, impl: str = "auto"):
+    if impl == "auto":
+        if _on_tpu():
+            impl = "pallas"
+        else:  # compiled CPU path: custom-vjp blocked (O(S) mem) above 2k
+            impl = "blocked" if k.shape[1] >= 2048 else "jnp"
+    if impl == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, interpret=not _on_tpu())
+    if impl == "blocked":
+        return flash_attention_xla(q, k, v, causal)
+    if impl == "blocked_naive":
+        return ref.attention_blocked(q, k, v, causal=causal)
+    if impl == "jnp":
+        return ref.attention_ref(q, k, v, causal=causal)
+    raise ValueError(impl)

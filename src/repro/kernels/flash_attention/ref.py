@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for fused attention (causal / bidirectional, GQA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q: (B,Sq,Hq,D); k,v: (B,Sk,Hkv,D) with Hq % Hkv == 0. fp32 softmax."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, group, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (D ** 0.5)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attention_blocked(q, k, v, causal: bool = True, block_k: int = 512):
+    """Flash-attention algorithm in pure jnp (scan over KV blocks with online
+    softmax). Same O(S) memory profile as the Pallas kernel — this is the
+    compiled path for long sequences (the S^2 score matrix of
+    ``attention_ref`` does not fit HBM at 32k). Matches attention_ref to fp32
+    tolerance."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    if Sk % block_k != 0:
+        return attention_ref(q, k, v, causal)
+    nk = Sk // block_k
+    qg = q.reshape(B, Sq, Hkv, group, D).astype(jnp.float32)
+    kb = k.reshape(B, nk, block_k, Hkv, D).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    vb = v.reshape(B, nk, block_k, Hkv, D).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    scale = 1.0 / (D ** 0.5)
+    qpos = jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kk, vv, j = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kk) * scale
+        if causal:
+            kpos = j * block_k + jnp.arange(block_k)
+            s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None, None],
+                          s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vv)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, group, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, group, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D).astype(q.dtype)

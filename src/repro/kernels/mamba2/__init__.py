@@ -1,0 +1,1 @@
+from repro.kernels.mamba2 import ops, ref  # noqa: F401

@@ -1,0 +1,29 @@
+"""Public API for the Mamba-2 SSD scan."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.mamba2 import ref
+from repro.kernels.mamba2.mamba2 import ssd_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:
+        return False
+
+
+def ssd_chunked(xh, dt, la, Bc, Cc, h0, chunk: int = 64, impl: str = "auto"):
+    S = xh.shape[1]
+    chunk = min(chunk, S)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "pallas" and S % chunk == 0:
+        return ssd_pallas(xh, dt, la, Bc, Cc, h0, chunk=chunk,
+                          interpret=not _on_tpu())
+    if impl in ("pallas", "jnp"):
+        return ref.ssd_chunked_jnp(xh, dt, la, Bc, Cc, h0, chunk=chunk)
+    if impl == "sequential":
+        return ref.ssd_sequential(xh, dt, la, Bc, Cc, h0)
+    raise ValueError(impl)

@@ -1,0 +1,1 @@
+from repro.kernels.rwkv6 import ops, ref  # noqa: F401

@@ -1,0 +1,37 @@
+"""Public API for the RWKV-6 WKV scan.
+
+``impl='auto'`` picks the Pallas kernel on TPU backends and the jnp chunked
+formulation elsewhere (CPU dry-run / smoke tests). Both match the sequential
+oracle (see tests/test_kernels_rwkv6.py).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rwkv6 import ref
+from repro.kernels.rwkv6.rwkv6 import wkv_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:
+        return False
+
+
+def wkv_chunked(r, k, v, w, u, state0, chunk: int = 32, impl: str = "auto"):
+    S = r.shape[1]
+    chunk = min(chunk, S)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "pallas" and S % chunk == 0:
+        return wkv_pallas(r, k, v, w, u, state0, chunk=chunk, interpret=not _on_tpu())
+    if impl == "pallas":
+        impl = "jnp"
+    if impl == "jnp":  # compiled path: factored (MXU) form, §Perf iteration 3
+        return ref.wkv_chunked_factored(r, k, v, w, u, state0)
+    if impl == "masked":
+        return ref.wkv_chunked_jnp(r, k, v, w, u, state0, chunk=chunk)
+    if impl == "sequential":
+        return ref.wkv_sequential(r, k, v, w, u, state0)
+    raise ValueError(impl)

@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for the RWKV-6 WKV scan.
+
+``wkv_sequential`` is the ground-truth recurrence; ``wkv_chunked_jnp`` is the
+MXU-friendly chunked formulation used on the pjit path (and mirrored by the
+Pallas kernel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_sequential(r, k, v, w, u, state0):
+    """r,k,v,w: (B,S,H,N) fp32; u: (H,N); state0: (B,H,N,N).
+    Returns (o: (B,S,H,N), state)."""
+    def step(S_, t):
+        rt, kt, vt, wt = r[:, t], k[:, t], v[:, t], w[:, t]
+        o = jnp.einsum("bhn,bhnm->bhm", rt, S_) + \
+            jnp.einsum("bhn,hn,bhn,bhm->bhm", rt, u, kt, vt)
+        S1 = wt[..., None] * S_ + jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        return S1, o
+
+    state, o = jax.lax.scan(step, state0, jnp.arange(r.shape[1]))
+    return o.transpose(1, 0, 2, 3), state
+
+
+def wkv_chunked_factored(r, k, v, w, u, state0, chunk: int = 16,
+                         clamp: float = -3.5):
+    """Factored intra-chunk form (EXPERIMENTS.md §Perf iteration 3): the
+    masked decay product exp(Lprev[t]-L[s]) is split as
+        q~[t] = r[t] * exp(Lprev[t])        (<= 1, safe)
+        k~[s] = k[s] * exp(-L[s])           (>= 1: bounded by the clamp)
+    so scores = q~ @ k~^T is a plain (C,N)x(N,C) matmul (MXU) instead of the
+    (C,C,N) elementwise-reduce tensor (VPU + O(C^2 N) traffic).
+
+    Per-step log-decay is clamped to >= ``clamp`` (the official RWKV CUDA
+    kernel clamps similarly): with chunk=16, exp(-clamp*C) <= e^56 stays
+    inside fp32. Decay steeper than e^-3.5 per step zeroes any contribution
+    within 2 tokens anyway.
+    """
+    B, S, H, N = r.shape
+    C = min(chunk, S)
+    if S % C != 0:
+        return wkv_sequential(r, k, v, w, u, state0)
+    nc = S // C
+    w = jnp.exp(jnp.maximum(jnp.log(w), clamp))  # clamped decay
+
+    def resh(t):
+        return t.reshape(B, nc, C, H, N).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+
+    def chunk_step(S0, inp):
+        rr, kk, vv, ww = inp  # (B,H,C,N)
+        lw = jnp.log(ww)
+        L = jnp.cumsum(lw, axis=2)
+        Lprev = L - lw
+        q_t = rr * jnp.exp(Lprev)          # <= |r|
+        k_t = kk * jnp.exp(-L)             # <= |k| * e^{-clamp*C}
+        o_inter = jnp.einsum("bhcn,bhnm->bhcm", q_t, S0)
+        scores = jnp.einsum("bhtn,bhsn->bhts", q_t, k_t)  # MXU matmul
+        tri = jnp.tril(jnp.ones((C, C), bool), k=-1)[None, None]
+        scores = jnp.where(tri, scores, 0.0)
+        diag = jnp.einsum("bhcn,bhcn,hn->bhc", rr, kk, u)
+        o = jnp.einsum("bhts,bhsn->bhtn", scores, vv) + diag[..., None] * vv \
+            + o_inter
+        Ltot = L[:, :, -1:, :]
+        kd = kk * jnp.exp(Ltot - L)
+        S1 = jnp.exp(Ltot[:, :, 0, :, None]) * S0 + jnp.einsum("bhsn,bhsm->bhnm", kd, vv)
+        return S1, o
+
+    state, oc = jax.lax.scan(chunk_step, state0, (rc, kc, vc, wc))
+    o = oc.transpose(1, 0, 3, 2, 4).reshape(B, S, H, N)
+    return o, state
+
+
+def wkv_chunked_jnp(r, k, v, w, u, state0, chunk: int = 32):
+    """Chunked formulation: intra-chunk masked decay products (<=1, stable)
+    + inter-chunk state scan."""
+    B, S, H, N = r.shape
+    C = min(chunk, S)
+    if S % C != 0:  # odd lengths (tiny smoke shapes): sequential oracle
+        return wkv_sequential(r, k, v, w, u, state0)
+    nc = S // C
+
+    def resh(t):
+        return t.reshape(B, nc, C, H, N).transpose(1, 0, 3, 2, 4)  # (nc,B,H,C,N)
+
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+
+    def chunk_step(S0, inp):
+        rr, kk, vv, ww = inp  # (B,H,C,N)
+        lw = jnp.log(ww)
+        L = jnp.cumsum(lw, axis=2)
+        Lprev = L - lw  # log prod of decays strictly before t
+        o_inter = jnp.einsum("bhcn,bhnm->bhcm", rr * jnp.exp(Lprev), S0)
+        # mask inside the exp (masked-branch overflow would NaN the grad)
+        ratio = Lprev[:, :, :, None, :] - L[:, :, None, :, :]  # (B,H,t,s,N)
+        tri = jnp.tril(jnp.ones((C, C), bool), k=-1)[None, None, :, :, None]
+        dmat = jnp.exp(jnp.where(tri, ratio, -jnp.inf))
+        scores = jnp.einsum("bhtn,bhsn,bhtsn->bhts", rr, kk, dmat)
+        diag = jnp.einsum("bhcn,bhcn,hn->bhc", rr, kk, u)
+        o_intra = jnp.einsum("bhts,bhsn->bhtn", scores, vv) + diag[..., None] * vv
+        Ltot = L[:, :, -1:, :]
+        kd = kk * jnp.exp(Ltot - L)
+        S1 = jnp.exp(Ltot[:, :, 0, :, None]) * S0 + jnp.einsum("bhsn,bhsm->bhnm", kd, vv)
+        return S1, o_inter + o_intra
+
+    state, oc = jax.lax.scan(chunk_step, state0, (rc, kc, vc, wc))
+    o = oc.transpose(1, 0, 3, 2, 4).reshape(B, S, H, N)
+    return o, state

@@ -1,0 +1,1 @@
+from repro.kernels.zsmask import ops, ref, threefry  # noqa: F401

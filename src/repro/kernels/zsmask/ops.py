@@ -1,0 +1,26 @@
+"""Public API for fused zero-sum mask apply."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.zsmask import ref
+from repro.kernels.zsmask.zsmask import zsmask_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:
+        return False
+
+
+def apply_zsmask(g, key_r, key_xi, silo, n_silos: int, sigma_c, b_scale,
+                 offset: int = 0, impl: str = "auto"):
+    """g: flat (D,) -> g + m_silo (fp32). Bit-identical across impls."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "pallas":
+        assert offset == 0, "pallas path takes whole flats"
+        return zsmask_pallas(g, key_r, key_xi, silo, n_silos, sigma_c, b_scale,
+                             interpret=not _on_tpu())
+    return ref.zsmask_ref(g, key_r, key_xi, silo, n_silos, sigma_c, b_scale, offset)

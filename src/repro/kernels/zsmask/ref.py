@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for zero-sum DP-mask generation + application.
+
+Pairwise construction (DESIGN.md §2, beyond-paper optimization):
+    m_i = B * (r_i - r_{(i+1) mod n}) + (sigma_c / sqrt(n)) * xi_i
+with r_j = N(0,1) from stream j of key_r and xi_i from stream i of key_xi.
+Telescoping cancels the r-terms across silos; sum_i xi_i / sqrt(n) is a
+standard normal, so the aggregate noise has std sigma_c exactly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.zsmask.threefry import normal_pair
+
+
+def _stream_normal(key, idx, stream):
+    """Standard normal per counter; the stream id (silo) is the counter's
+    second word so streams are independent."""
+    z0, _ = normal_pair(key[0], key[1], idx,
+                        jnp.asarray(stream, jnp.uint32) + jnp.zeros_like(idx))
+    return z0
+
+
+def zsmask_ref(g, key_r, key_xi, silo, n_silos, sigma_c, b_scale, offset=0):
+    """g: flat (D,) gradient slice; key_*: (2,) uint32; silo: int (traceable).
+    Returns (g + m_silo) in fp32."""
+    D = g.shape[0]
+    idx = jnp.arange(D, dtype=jnp.uint32) + jnp.uint32(offset)
+    nxt = (silo + 1) % n_silos
+    r_i = _stream_normal(key_r, idx, silo)
+    r_next = _stream_normal(key_r, idx, nxt)
+    xi = _stream_normal(key_xi, idx, silo)
+    mask = b_scale * (r_i - r_next) + (sigma_c / jnp.sqrt(float(n_silos))) * xi
+    return g.astype(jnp.float32) + mask
+
+
+def mask_only_ref(d, key_r, key_xi, silo, n_silos, sigma_c, b_scale, offset=0):
+    return zsmask_ref(jnp.zeros((d,), jnp.float32), key_r, key_xi, silo,
+                      n_silos, sigma_c, b_scale, offset)

@@ -1,0 +1,56 @@
+"""Threefry-2x32 counter-based PRNG + Box-Muller, in pure jnp uint32 ops
+(add / xor / rotate only — TPU-friendly, works inside Pallas kernel bodies
+and in interpret mode, bit-identical between the kernel and the oracle).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_ROT_A = (13, 15, 26, 6)
+_ROT_B = (17, 29, 16, 24)
+_PARITY = 0x1BD11BDA  # kept as a Python int: jnp constants would be captured
+TWO_PI = 6.283185307179586
+
+
+def _rotl(x, r: int):
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def threefry2x32(k0, k1, x0, x1):
+    """All args uint32 (broadcastable). Returns (y0, y1) uint32."""
+    k0 = jnp.uint32(k0)
+    k1 = jnp.uint32(k1)
+    x0 = x0.astype(jnp.uint32)
+    x1 = x1.astype(jnp.uint32)
+    ks = (k0, k1, k0 ^ k1 ^ jnp.uint32(_PARITY))
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for i in range(5):
+        rots = _ROT_A if i % 2 == 0 else _ROT_B
+        for r in rots:
+            x0 = x0 + x1
+            x1 = _rotl(x1, r)
+            x1 = x1 ^ x0
+        x0 = x0 + ks[(i + 1) % 3]
+        x1 = x1 + ks[(i + 2) % 3] + jnp.uint32(i + 1)
+    return x0, x1
+
+
+def uniform01(bits):
+    """uint32 -> float32 uniform in (0, 1]."""
+    return (bits.astype(jnp.float32) + 1.0) * (1.0 / 4294967296.0)
+
+
+def normal_pair(k0, k1, c0, c1):
+    """One Box-Muller pair of standard normals from counters (c0, c1)."""
+    b0, b1 = threefry2x32(k0, k1, c0, c1)
+    u1 = uniform01(b0)
+    u2 = uniform01(b1)
+    rad = jnp.sqrt(-2.0 * jnp.log(u1))
+    return rad * jnp.cos(TWO_PI * u2), rad * jnp.sin(TWO_PI * u2)
+
+
+def normal_stream(k0, k1, idx, stream):
+    """Standard normal per element: idx (counter, uint32 array), stream id."""
+    z0, _ = normal_pair(k0, k1, idx, jnp.uint32(stream) + jnp.zeros_like(idx))
+    return z0

@@ -1,0 +1,42 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(arch, shape)`` returns the step function's inputs for the
+dry-run: weak-type-correct, shardable ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        S_in = 1  # one new token against a seq_len-deep cache
+    else:
+        S_in = S
+    out: dict = {}
+    if cfg.frontend != "none":
+        out["embeds"] = SDS((B, S_in, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = SDS((B, S_in), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = SDS((B, S_in), jnp.int32)
+    if cfg.mrope:
+        out["positions"] = SDS((3, B, S_in), jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, model) -> dict:
+    """Abstract KV cache / recurrent state via eval_shape (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    return jax.eval_shape(lambda: model.init_cache(B, S))
+
+
+def params_specs(model) -> dict:
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))

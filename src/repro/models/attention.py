@@ -1,0 +1,138 @@
+"""GQA attention with RoPE / M-RoPE, KV cache, and an optional fused
+flash-attention (Pallas) path for training/prefill.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding_rules import constrain
+from repro.models.layers import apply_rope, dense_init, mrope_sections_for
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, cfg.d_model, cfg.attn_inner, dtype),
+        "wk": dense_init(kk, cfg.d_model, cfg.kv_inner, dtype),
+        "wv": dense_init(kv, cfg.d_model, cfg.kv_inner, dtype),
+        "wo": dense_init(ko, cfg.attn_inner, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.attn_inner,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_inner,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_inner,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    if cfg.rope:
+        sections = mrope_sections_for(int(cfg.d_head * cfg.rope_pct)) if cfg.mrope else None
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_pct, sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_pct, sections)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _sdpa(q, k, v, causal: bool, q_offset) -> jax.Array:
+    """Reference scaled-dot-product attention with GQA head grouping.
+
+    q: (B, Sq, Hq, Dh); k, v: (B, Sk, Hkv, Dh). q_offset: position of q[0]
+    within the kv sequence (for decode: Sk-1 typically).
+    """
+    B, Sq, Hq, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, group, Dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / (Dh ** 0.5)
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        kpos = jnp.arange(Sk)
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(B, Sq, Hq, Dh)
+
+
+def attn_apply(p, x, cfg: ModelConfig, positions, cache: Optional[dict] = None,
+               use_flash: bool = False):
+    """Returns (out, new_cache). cache = {'k','v': (B, S_max, Hkv, Dh),
+    'len': ()} — decode updates in place at position ``len``."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+
+    if cache is not None:
+        idx = cache["len"]
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        new_cache = {"k": ck, "v": cv, "len": idx + S}
+        if S > 1:
+            # initial prefill (idx == 0 by construction): flash self-attention
+            # over the incoming chunk — never materializes S^2 scores.
+            from repro.kernels.flash_attention import ops as flash_ops
+            out = flash_ops.flash_attention(q, k, v, causal=cfg.causal)
+        else:
+            kv_len = idx + S
+            kpos = jnp.arange(ck.shape[1])
+            valid = kpos < kv_len
+            out = _sdpa_masked(q, ck, cv, cfg.causal, idx, valid)
+        out = out.reshape(B, S, cfg.attn_inner)
+        return out @ p["wo"].astype(x.dtype), new_cache
+
+    if use_flash:
+        from repro.kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_attention(q, k, v, causal=cfg.causal)
+    else:
+        out = _sdpa(q, k, v, cfg.causal, q_offset=0)
+    out = out.reshape(B, S, cfg.attn_inner)
+    out = constrain(out, "batch", None, "heads")
+    return out @ p["wo"].astype(x.dtype), None
+
+
+def _sdpa_masked(q, k, v, causal, q_offset, valid_k):
+    B, Sq, Hq, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, group, Dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(q.dtype)).astype(jnp.float32)
+    scores = scores / (Dh ** 0.5)
+    mask = valid_k[None, :]
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        kpos = jnp.arange(Sk)
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(q.dtype))
+    return out.reshape(B, Sq, Hq, Dh)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_entries: int,
+                  dtype=jnp.bfloat16) -> dict:
+    """Stacked KV cache for ``n_entries`` attention invocations (layers)."""
+    shape = (n_entries, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((n_entries,), jnp.int32),
+    }

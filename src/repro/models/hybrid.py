@@ -1,0 +1,158 @@
+"""Zamba2-style hybrid stack: Mamba2 backbone + one *shared* (parameter-tied)
+attention+MLP block invoked every ``attn_every`` layers.
+
+Layer layout for n_layers=81, attn_every=6:
+  13 groups of [6 mamba layers + shared attn block] + 3 trailing mamba layers.
+Each shared-block *invocation* has its own KV cache entry (params are tied,
+activations are not).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding_rules import constrain
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models.layers import (
+    chunked_lm_loss,
+    cross_entropy,
+    dense_init,
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    swiglu_apply,
+    swiglu_init,
+)
+
+
+def n_groups(cfg: ModelConfig) -> tuple[int, int]:
+    g = cfg.n_layers // cfg.attn_every
+    return g, cfg.n_layers - g * cfg.attn_every
+
+
+def mamba_layer_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    return {"ln": rmsnorm_init(cfg.d_model, dtype),
+            "mamba": mamba2.mamba2_init(key, cfg, dtype)}
+
+
+def mamba_layer_apply(p, x, cfg, state=None):
+    h, ns = mamba2.mamba2_apply(p["mamba"], rmsnorm(p["ln"], x), cfg, state)
+    return x + h, ns
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32):
+    ke, km, ka, kf, kh = jax.random.split(key, 5)
+    layer_keys = jax.random.split(km, cfg.n_layers)
+    return {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "mamba_layers": jax.vmap(lambda k: mamba_layer_init(k, cfg, dtype))(layer_keys),
+        "shared": {
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn.attn_init(ka, cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "ffn": swiglu_init(kf, cfg.d_model, cfg.d_ff, dtype),
+        },
+        "ln_f": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": dense_init(kh, cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def _shared_apply(p, x, cfg, positions, cache_entry=None, use_flash=False):
+    h, nc = attn.attn_apply(p["attn"], rmsnorm(p["ln1"], x), cfg, positions,
+                            cache_entry, use_flash)
+    x = x + h
+    x = x + swiglu_apply(p["ffn"], rmsnorm(p["ln2"], x))
+    return constrain(x, "batch", None, None), nc
+
+
+def _split_groups(tree, g, ae):
+    """Split stacked (L, ...) params into ((g, ae, ...), (tail, ...))."""
+    head = jax.tree.map(lambda t: t[: g * ae].reshape((g, ae) + t.shape[1:]), tree)
+    tail = jax.tree.map(lambda t: t[g * ae:], tree)
+    return head, tail
+
+
+def forward(params, cfg: ModelConfig, batch: dict, state=None, remat=False,
+            compute_dtype=jnp.bfloat16, logits_mode="all", use_flash=False):
+    x = params["embed"].astype(compute_dtype)[batch["tokens"]]
+    x = constrain(x, "batch", None, None)
+    B, S, _ = x.shape
+    g, tail = n_groups(cfg)
+    ae = cfg.attn_every
+    offset = 0 if state is None else state["attn_cache"]["len"][0]
+    positions = jnp.broadcast_to(offset + jnp.arange(S)[None], (B, S))
+
+    head_p, tail_p = _split_groups(params["mamba_layers"], g, ae)
+
+    if state is None:
+        def inner(h, lp):
+            h, _ = mamba_layer_apply(lp, h, cfg, None)
+            return h, None
+
+        def group(h, gp):
+            h, _ = jax.lax.scan(inner, h, gp)
+            h, _ = _shared_apply(params["shared"], h, cfg, positions, None, use_flash)
+            return h, None
+        if remat:
+            group = jax.checkpoint(group, prevent_cse=False)
+        x, _ = jax.lax.scan(group, x, head_p)
+        if tail:
+            x, _ = jax.lax.scan(inner, x, tail_p)
+        new_state = None
+    else:
+        m_state = {"h": state["h"], "conv": state["conv"]}
+        mh, mt = _split_groups(m_state, g, ae)
+
+        def inner_s(h, inp):
+            lp, se = inp
+            h, ns = mamba_layer_apply(lp, h, cfg, se)
+            return h, ns
+
+        def group_s(h, inp):
+            gp, gs, ce = inp
+            h, ns = jax.lax.scan(inner_s, h, (gp, gs))
+            h, nc = _shared_apply(params["shared"], h, cfg, positions, ce, use_flash)
+            return h, (ns, nc)
+        x, (new_mh, new_cache) = jax.lax.scan(group_s, x, (head_p, mh, state["attn_cache"]))
+        new_mt = mt
+        if tail:
+            x, new_mt = jax.lax.scan(inner_s, x, (tail_p, mt))
+        merged = jax.tree.map(
+            lambda a, b: jnp.concatenate([a.reshape((g * ae,) + a.shape[2:]), b], 0),
+            new_mh, new_mt)
+        new_state = {"h": merged["h"], "conv": merged["conv"], "attn_cache": new_cache}
+
+    x = rmsnorm(params["ln_f"], x)
+    if logits_mode == "hidden":
+        return x, new_state
+    if logits_mode == "last":
+        x = x[:, -1:]
+    logits = x @ params["lm_head"].astype(x.dtype)
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, new_state
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    g, _ = n_groups(cfg)
+    d_in = cfg.mamba_expand * cfg.d_model
+    nh = d_in // cfg.mamba_headdim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return {
+        "h": jnp.zeros((cfg.n_layers, batch, nh, cfg.mamba_headdim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.mamba_conv - 1, conv_dim), dtype),
+        "attn_cache": attn.init_kv_cache(cfg, batch, max_len, g, dtype),
+    }
+
+
+def loss_fn(params, cfg, batch, remat=False, compute_dtype=jnp.bfloat16, use_flash=False):
+    hidden, _ = forward(params, cfg, batch, None, remat, compute_dtype,
+                        logits_mode="hidden", use_flash=use_flash)
+    return chunked_lm_loss(hidden, params["lm_head"], batch["labels"])
+
+
+def decode_step(params, cfg, batch, state, compute_dtype=jnp.bfloat16):
+    logits, state = forward(params, cfg, batch, state,
+                            compute_dtype=compute_dtype, logits_mode="last")
+    return logits[:, 0], state

@@ -1,0 +1,162 @@
+"""Core layer primitives: dense, norms, RoPE / M-RoPE, SwiGLU.
+
+Functional style: ``*_init(key, ...) -> params`` and ``*_apply(params, x)``.
+Params live in ``param_dtype``; compute happens in the dtype of the incoming
+activations (cast where needed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding_rules import constrain
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (full / partial / multi-axis M-RoPE)
+
+
+def rope_freqs(d_rot: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float, rope_pct: float = 1.0,
+               mrope_sections: tuple[int, ...] | None = None) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) int or (3, B, S) for M-RoPE."""
+    dh = x.shape[-1]
+    d_rot = int(dh * rope_pct)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    x_rot, x_pass = x[..., :d_rot], x[..., d_rot:]
+    inv = rope_freqs(d_rot, theta)  # (d_rot/2,)
+
+    if positions.ndim == 3 and mrope_sections is not None:
+        # M-RoPE (Qwen2-VL): frequency bands split across (t, h, w) axes.
+        # positions: (3, B, S); sections over the d_rot/2 frequencies.
+        ang_all = positions[..., None].astype(jnp.float32) * inv  # (3,B,S,d_rot/2)
+        parts, start = [], 0
+        for i, sec in enumerate(mrope_sections):
+            parts.append(ang_all[i, ..., start:start + sec])
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)  # (B,S,d_rot/2)
+    else:
+        if positions.ndim == 3:  # M-RoPE ids given but plain rope: use t-axis
+            positions = positions[0]
+        ang = positions[..., None].astype(jnp.float32) * inv  # (B,S,d_rot/2)
+
+    cos = jnp.cos(ang)[:, :, None, :]  # (B,S,1,d_rot/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x_rot[..., ::2], x_rot[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    rot = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([rot.astype(x.dtype), x_pass], axis=-1)
+
+
+def mrope_sections_for(d_rot: int) -> tuple[int, int, int]:
+    """Qwen2-VL-style (t, h, w) split of the d_rot/2 frequency bands."""
+    half = d_rot // 2
+    t = half - 2 * (half * 3 // 8)
+    hw = half * 3 // 8
+    return (t, hw, hw)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+
+
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu_apply(p, x):
+    g = x @ p["w_gate"].astype(x.dtype)
+    u = x @ p["w_up"].astype(x.dtype)
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "batch", None, "ff")
+    return h @ p["w_down"].astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * (1.0 / d ** 0.5)).astype(dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy, fp32 logsumexp. logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def chunked_lm_loss(x: jax.Array, head: jax.Array, labels: jax.Array,
+                    chunk: int = 512) -> jax.Array:
+    """Vocab-parallel, sequence-chunked LM cross-entropy.
+
+    Never materializes the full (B, S, V) logits: scans over S in chunks, the
+    chunk body is rematerialized in backward (jax.checkpoint), and the label
+    log-prob uses a one-hot einsum instead of take_along_axis so the reduction
+    over the vocab-sharded dim partitions into a psum instead of an
+    all-gather of the logits (the single biggest memory/collective win on
+    152k-vocab archs — see EXPERIMENTS.md §Perf).
+    """
+    B, S, D = x.shape
+    V = head.shape[-1]
+    if S % chunk != 0:
+        chunk = S  # fall back to single chunk for odd sizes (smoke tests)
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    # gather the (small) head weight once instead of all-reducing the (huge)
+    # logits: replicate over the fsdp axis, keep vocab TP
+    head = constrain(head, None, "vocab")
+
+    @jax.checkpoint
+    def body(total, inp):
+        xs, ls = inp  # (B, chunk, D), (B, chunk)
+        logits = (xs @ head.astype(xs.dtype)).astype(jnp.float32)  # (B,c,V)
+        logits = constrain(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(ls, V, dtype=jnp.float32)
+        ll = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        return total + jnp.sum(lse - ll), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (B * S)

@@ -1,0 +1,109 @@
+"""Mamba-2 (SSD) block with chunked scan — used by zamba2-7b.
+
+Per head (headdim P, state N), scalar decay per head:
+    h_t = a_t h_{t-1} + (dt_t x_t) outer B_t        h: (P, N)
+    y_t = h_t C_t + D x_t
+with a_t = exp(A * dt_t), A < 0 learned per head, dt via softplus.
+Chunked (SSD block decomposition, arXiv:2405.21060): intra-chunk quadratic
+term with decay mask Gamma[t,s] = exp(la_t - la_s), inter-chunk state scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+CHUNK = 64
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    d_in = cfg.mamba_expand * d
+    N = cfg.ssm_state
+    nh = d_in // cfg.mamba_headdim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    conv_dim = d_in + 2 * N
+    return {
+        "in_proj": dense_init(k1, d, 2 * d_in + 2 * N + nh, dtype),  # x,z,B,C,dt
+        "conv_w": (jax.random.normal(k2, (cfg.mamba_conv, conv_dim), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gn_scale": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(k3, d_in, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C). conv_state: (B,K-1,C)."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return jax.nn.silu(out + b.astype(x.dtype)), new_state
+
+
+def ssd_reference(xh, dt, a_log_dt, Bc, Cc, h0):
+    """Sequential oracle."""
+    B, S, nh, P = xh.shape
+
+    def step(h, t):
+        a = jnp.exp(a_log_dt[:, t])  # (B,nh)
+        upd = jnp.einsum("bhp,bn->bhpn", xh[:, t] * dt[:, t][..., None], Bc[:, t])
+        h1 = a[..., None, None] * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h1, Cc[:, t])
+        return h1, y
+
+    h, y = jax.lax.scan(step, h0, jnp.arange(S))
+    return y.transpose(1, 0, 2, 3), h
+
+
+def mamba2_apply(p, x, cfg: ModelConfig, state=None):
+    """x: (B,S,D). state: {'h': (B,nh,P,N), 'conv': (B,K-1,conv_dim)} or None.
+    Returns (out, new_state)."""
+    B, S, D = x.shape
+    d_in = cfg.mamba_expand * D
+    N = cfg.ssm_state
+    P = cfg.mamba_headdim
+    nh = d_in // P
+
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bc, Cc = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])  # (nh,) negative
+    la = A * dt  # log decay per step
+    xh = xs.reshape(B, S, nh, P).astype(jnp.float32)
+    h0 = jnp.zeros((B, nh, P, N), jnp.float32) if state is None else state["h"]
+
+    if S == 1:  # decode fast path
+        a = jnp.exp(la[:, 0])
+        upd = jnp.einsum("bhp,bn->bhpn", xh[:, 0] * dt[:, 0][..., None], Bc[:, 0].astype(jnp.float32))
+        h1 = a[..., None, None] * h0 + upd
+        y = jnp.einsum("bhpn,bn->bhp", h1, Cc[:, 0].astype(jnp.float32))[:, None]
+    else:
+        from repro.kernels.mamba2 import ops as ssd_ops
+        y, h1 = ssd_ops.ssd_chunked(xh, dt, la, Bc.astype(jnp.float32),
+                                    Cc.astype(jnp.float32), h0)
+
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    # gated RMS-norm (Mamba-2 uses normalization before out_proj)
+    y = y * jax.nn.silu(z)
+    y32 = y.astype(jnp.float32)
+    y = (y32 * jax.lax.rsqrt(jnp.mean(y32 * y32, -1, keepdims=True) + 1e-6)
+         * p["gn_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if state is None:
+        return out, None
+    return out, {"h": h1, "conv": new_conv.astype(state["conv"].dtype)}

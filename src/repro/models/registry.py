@@ -1,0 +1,61 @@
+"""Unified model interface: ``build_model(cfg)`` returns a ``Model`` whose
+functions close over the architecture config.
+
+batch dicts:
+  train:   {'tokens': (B,S) i32, 'labels': (B,S) i32}            (LM)
+           {'embeds': (B,S,D), 'labels': (B,S), 'positions'?}    (vlm/audio)
+  prefill: {'tokens': (B,S)} (+embeds/positions) -> (last_logits, cache)
+  decode:  {'tokens': (B,1)} -> (logits (B,V), cache)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid, rwkv_stack, transformer
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    init_cache: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+
+
+def build_model(cfg: ModelConfig, param_dtype=jnp.float32,
+                compute_dtype=jnp.bfloat16, remat: bool = False,
+                use_flash: bool = False) -> Model:
+    if cfg.family in ("dense", "moe", "vlm", "encoder"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: transformer.init(key, cfg, param_dtype),
+            loss=lambda p, b: transformer.loss_fn(p, cfg, b, use_flash, remat, compute_dtype),
+            init_cache=lambda batch, max_len: transformer.init_cache(cfg, batch, max_len, compute_dtype),
+            prefill=lambda p, b, c: transformer.prefill(p, cfg, b, c, compute_dtype),
+            decode_step=lambda p, b, c: transformer.decode_step(p, cfg, b, c, compute_dtype),
+        )
+    if cfg.family == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: rwkv_stack.init(key, cfg, param_dtype),
+            loss=lambda p, b: rwkv_stack.loss_fn(p, cfg, b, remat=remat, compute_dtype=compute_dtype),
+            init_cache=lambda batch, max_len: rwkv_stack.init_state(cfg, batch, param_dtype),
+            prefill=lambda p, b, c: rwkv_stack.decode_step(p, cfg, b, c, compute_dtype),
+            decode_step=lambda p, b, c: rwkv_stack.decode_step(p, cfg, b, c, compute_dtype),
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: hybrid.init(key, cfg, param_dtype),
+            loss=lambda p, b: hybrid.loss_fn(p, cfg, b, remat, compute_dtype, use_flash),
+            init_cache=lambda batch, max_len: hybrid.init_state(cfg, batch, max_len, compute_dtype),
+            prefill=lambda p, b, c: hybrid.decode_step(p, cfg, b, c, compute_dtype),
+            decode_step=lambda p, b, c: hybrid.decode_step(p, cfg, b, c, compute_dtype),
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,134 @@
+"""RWKV-6 "Finch" block: data-dependent per-channel decay linear attention.
+
+Recurrence per head (head size N):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T                (S: N x N)
+    o_t = r_t^T S_{t-1} + (r_t . u . k_t) v_t^T        (bonus on current token)
+
+Training path uses the chunked formulation (intra-chunk masked decay product +
+inter-chunk state scan); decode carries S and the token-shift buffers.
+[arXiv:2404.05892]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+LORA_RANK = 64
+CHUNK = 32
+
+
+def rwkv6_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H, N = cfg.n_heads, cfg.rwkv_head_size
+    ks = jax.random.split(key, 12)
+    p = {
+        # token-mix projections
+        "wr": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wg": dense_init(ks[3], d, d, dtype),
+        "wo": dense_init(ks[4], d, d, dtype),
+        # ddlerp mix coefficients (5: r,k,v,g,w) + lora
+        "mu": jnp.full((5, d), 0.5, dtype),
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "lora_a": dense_init(ks[5], d, 5 * LORA_RANK, dtype, scale=0.01),
+        "lora_b": (jax.random.normal(ks[6], (5, LORA_RANK, d), jnp.float32) * 0.01).astype(dtype),
+        # data-dependent decay
+        "w_base": jnp.zeros((d,), jnp.float32) - 0.6,
+        "w_lora_a": dense_init(ks[7], d, LORA_RANK, dtype, scale=0.01),
+        "w_lora_b": dense_init(ks[8], LORA_RANK, d, dtype, scale=0.01),
+        "u_bonus": jnp.zeros((H, N), jnp.float32),
+        # group norm per head
+        "gn_scale": jnp.ones((d,), dtype),
+        # channel mix
+        "mu_cm_k": jnp.full((d,), 0.5, dtype),
+        "mu_cm_r": jnp.full((d,), 0.5, dtype),
+        "w_in": dense_init(ks[9], d, cfg.d_ff, dtype),
+        "w_out": dense_init(ks[10], cfg.d_ff, d, dtype),
+        "w_recept": dense_init(ks[11], d, d, dtype),
+    }
+    return p
+
+
+def _token_shift(x, x_prev_last=None):
+    """x: (B,S,D) -> previous token's activation; position 0 uses
+    x_prev_last (B,D) (zero at sequence start)."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_prev_last is not None:
+        shifted = shifted.at[:, 0].set(x_prev_last)
+    return shifted
+
+
+def _mix_inputs(p, x, x_prev):
+    """ddlerp: 5 per-token mix coefficients -> mixed inputs (r,k,v,g,w)."""
+    dx = x_prev - x
+    tmp = x + dx * p["mu_x"].astype(x.dtype)
+    a = jnp.tanh(tmp @ p["lora_a"].astype(x.dtype))  # (B,S,5R)
+    B, S, _ = a.shape
+    a = a.reshape(B, S, 5, LORA_RANK)
+    adj = jnp.einsum("bsir,ird->bsid", a, p["lora_b"].astype(x.dtype))  # (B,S,5,D)
+    mix = p["mu"].astype(x.dtype)[None, None] + adj
+    return x[:, :, None] + dx[:, :, None] * mix  # (B,S,5,D)
+
+
+def _decay(p, xw):
+    ww = p["w_base"] + (jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32))
+                        @ p["w_lora_b"].astype(jnp.float32))
+    return jnp.exp(-jnp.exp(ww))  # (B,S,D) in (0,1)
+
+
+def _group_norm(x, scale, H, N, eps=1e-5):
+    B, S, _ = x.shape
+    xh = x.reshape(B, S, H, N).astype(jnp.float32)
+    mu = jnp.mean(xh, -1, keepdims=True)
+    var = jnp.var(xh, -1, keepdims=True)
+    y = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (y.reshape(B, S, H * N) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def time_mix(p, x, cfg: ModelConfig, state=None):
+    """state: {'S': (B,H,N,N), 'x_prev': (B,D)} or None (train, zero init)."""
+    B, S, D = x.shape
+    H, N = cfg.n_heads, cfg.rwkv_head_size
+    from repro.distributed.sharding_rules import constrain
+    x_prev = _token_shift(x, None if state is None else state["x_prev"])
+    mixed = _mix_inputs(p, x, x_prev)  # (B,S,5,D)
+    xr, xk, xv, xg, xw = [mixed[:, :, i] for i in range(5)]
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(B, S, H, N).astype(jnp.float32)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(B, S, H, N).astype(jnp.float32)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(B, S, H, N).astype(jnp.float32)
+    g = xg @ p["wg"].astype(x.dtype)
+    w = _decay(p, xw).reshape(B, S, H, N)  # fp32
+    # head-TP for the recurrence (the wkv scan is embarrassingly parallel
+    # over heads; without this the scan compute replicates over 'model')
+    r = constrain(r, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    v = constrain(v, "batch", None, "heads", None)
+    w = constrain(w, "batch", None, "heads", None)
+
+    S0 = jnp.zeros((B, H, N, N), jnp.float32) if state is None else state["S"]
+    if S == 1:  # decode fast path
+        o = jnp.einsum("bhn,bhnm->bhm", r[:, 0] * 1.0, S0) \
+            + jnp.einsum("bhn,hn,bhn,bhm->bhm", r[:, 0], p["u_bonus"], k[:, 0], v[:, 0])
+        S1 = w[:, 0][..., None] * S0 + jnp.einsum("bhn,bhm->bhnm", k[:, 0], v[:, 0])
+        o = o[:, None]  # (B,1,H,N)
+    else:
+        from repro.kernels.rwkv6 import ops as rwkv_ops
+        o, S1 = rwkv_ops.wkv_chunked(r, k, v, w, p["u_bonus"], S0)
+    out = _group_norm(o.reshape(B, S, H * N).astype(x.dtype), p["gn_scale"], H, N)
+    out = out * jax.nn.silu(g)
+    new_state = {"S": S1, "x_prev": x[:, -1]}
+    return out @ p["wo"].astype(x.dtype), new_state
+
+
+def channel_mix(p, x, state=None):
+    x_prev = _token_shift(x, None if state is None else state["x_prev_cm"])
+    dx = x_prev - x
+    xk = x + dx * p["mu_cm_k"].astype(x.dtype)
+    xr = x + dx * p["mu_cm_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["w_in"].astype(x.dtype)))
+    rr = jax.nn.sigmoid(xr @ p["w_recept"].astype(x.dtype))
+    return rr * (kk @ p["w_out"].astype(x.dtype)), {"x_prev_cm": x[:, -1]}

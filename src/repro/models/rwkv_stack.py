@@ -1,0 +1,105 @@
+"""RWKV-6 full LM stack (attention-free): scan over blocks, layernorms as in
+the reference implementation, recurrent state for decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding_rules import constrain
+from repro.models import rwkv6
+from repro.models.layers import (chunked_lm_loss, cross_entropy, dense_init,
+                                 embed_init, layernorm, layernorm_init)
+
+
+def block_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    return {
+        "ln1": layernorm_init(cfg.d_model, dtype),
+        "mix": rwkv6.rwkv6_init(key, cfg, dtype),
+        "ln2": layernorm_init(cfg.d_model, dtype),
+    }
+
+
+def block_apply(p, x, cfg: ModelConfig, state=None):
+    h, st_tm = rwkv6.time_mix(p["mix"], layernorm(p["ln1"], x), cfg, state)
+    x = x + h
+    h, st_cm = rwkv6.channel_mix(p["mix"], layernorm(p["ln2"], x),
+                                 state if state is not None else None)
+    x = x + h
+    if cfg.sequence_parallel and state is None:
+        x = constrain(x, "batch", "seq_tp", None)
+    else:
+        x = constrain(x, "batch", None, None)
+    new_state = None
+    if state is not None:
+        new_state = {**st_tm, **st_cm}
+    return x, new_state
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32):
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "ln_in": layernorm_init(cfg.d_model, dtype),
+        "layers": jax.vmap(lambda k: block_init(k, cfg, dtype))(layer_keys),
+        "ln_f": layernorm_init(cfg.d_model, dtype),
+        "lm_head": dense_init(kh, cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, N, D = cfg.n_heads, cfg.rwkv_head_size, cfg.d_model
+    L = cfg.n_layers
+    return {
+        "S": jnp.zeros((L, batch, H, N, N), jnp.float32),
+        "x_prev": jnp.zeros((L, batch, D), dtype),
+        "x_prev_cm": jnp.zeros((L, batch, D), dtype),
+        "len": jnp.zeros((L,), jnp.int32),  # uniform cache interface
+    }
+
+
+def forward(params, cfg: ModelConfig, batch: dict, state=None, remat=False,
+            compute_dtype=jnp.bfloat16, logits_mode="all"):
+    x = params["embed"].astype(compute_dtype)[batch["tokens"]]
+    x = constrain(x, "batch", None, None)
+    x = layernorm(params["ln_in"], x)
+
+    if state is None:
+        def body(h, lp):
+            h, _ = block_apply(lp, h, cfg, None)
+            return h, jnp.zeros((), jnp.float32)
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        new_state = None
+    else:
+        st = {k: state[k] for k in ("S", "x_prev", "x_prev_cm")}
+
+        def body_s(h, inp):
+            lp, se = inp
+            h, ns = block_apply(lp, h, cfg, se)
+            return h, ns
+        x, new_st = jax.lax.scan(body_s, x, (params["layers"], st))
+        new_state = {**new_st, "len": state["len"] + x.shape[1]}
+
+    x = layernorm(params["ln_f"], x)
+    if logits_mode == "hidden":
+        return x, new_state
+    if logits_mode == "last":
+        x = x[:, -1:]
+    logits = x @ params["lm_head"].astype(x.dtype)
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, new_state
+
+
+def loss_fn(params, cfg, batch, remat=False, compute_dtype=jnp.bfloat16, **_):
+    hidden, _ = forward(params, cfg, batch, None, remat, compute_dtype,
+                        logits_mode="hidden")
+    return chunked_lm_loss(hidden, params["lm_head"], batch["labels"])
+
+
+def decode_step(params, cfg, batch, state, compute_dtype=jnp.bfloat16):
+    logits, state = forward(params, cfg, batch, state,
+                            compute_dtype=compute_dtype, logits_mode="last")
+    return logits[:, 0], state

@@ -1,0 +1,181 @@
+"""The paper's evaluation models (§8, Appendix B): MLP3, CNN6, WRN28.
+
+These are the models the privacy-barrier experiments replicate. Functional
+init/apply; ``loss`` takes ``{'x': (B, ...), 'y': (B,) int32}``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import CNNConfig, MLPConfig, WRNConfig
+from repro.models.layers import cross_entropy, dense_init
+
+
+# ---------------------------------------------------------------------------
+# MNIST-MLP3
+
+
+def mlp3_init(key, cfg: MLPConfig, dtype=jnp.float32):
+    dims = (cfg.input_dim,) + cfg.hidden + (cfg.n_classes,)
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"l{i}": {"w": dense_init(keys[i], dims[i], dims[i + 1], dtype),
+                  "b": jnp.zeros((dims[i + 1],), dtype)}
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp3_apply(params, x):
+    x = x.reshape(x.shape[0], -1)
+    n = len(params)
+    for i in range(n):
+        p = params[f"l{i}"]
+        x = x @ p["w"] + p["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# CIFAR10-CNN6
+
+
+def _conv_init(key, k, cin, cout, dtype=jnp.float32):
+    scale = (1.0 / (k * k * cin)) ** 0.5
+    return (jax.random.normal(key, (k, k, cin, cout), jnp.float32) * scale).astype(dtype)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def cnn6_init(key, cfg: CNNConfig, dtype=jnp.float32):
+    chans = (cfg.in_channels,) + cfg.channels
+    keys = jax.random.split(key, len(cfg.channels) + 1)
+    params = {
+        f"c{i}": {"w": _conv_init(keys[i], 3, chans[i], chans[i + 1], dtype),
+                  "b": jnp.zeros((chans[i + 1],), dtype)}
+        for i in range(len(cfg.channels))
+    }
+    # 3 maxpools of stride 2 -> hw/8
+    feat = (cfg.image_hw // 8) ** 2 * cfg.channels[-1]
+    params["fc"] = {"w": dense_init(keys[-1], feat, cfg.n_classes, dtype),
+                    "b": jnp.zeros((cfg.n_classes,), dtype)}
+    return params
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn6_apply(params, x):
+    n = sum(1 for k in params if k.startswith("c"))
+    for i in range(n):
+        p = params[f"c{i}"]
+        x = jax.nn.relu(_conv(x, p["w"]) + p["b"])
+        if i % 2 == 1:  # pool after every conv pair
+            x = _maxpool(x)
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# CIFAR10-WRN28 (WideResNet, group-norm variant as in DP literature [31])
+
+
+def _gn(x, scale, bias, groups=8, eps=1e-5):
+    B, H, W, C = x.shape
+    xg = x.reshape(B, H, W, groups, C // groups).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    y = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(B, H, W, C)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def _wrn_block_init(key, cin, cout, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "gn1": {"s": jnp.ones((cin,), dtype), "b": jnp.zeros((cin,), dtype)},
+        "conv1": _conv_init(k1, 3, cin, cout, dtype),
+        "gn2": {"s": jnp.ones((cout,), dtype), "b": jnp.zeros((cout,), dtype)},
+        "conv2": _conv_init(k2, 3, cout, cout, dtype),
+    }
+    if cin != cout:
+        p["proj"] = _conv_init(k3, 1, cin, cout, dtype)
+    return p
+
+
+def _wrn_block_apply(p, x, stride):
+    h = _gn(x, p["gn1"]["s"], p["gn1"]["b"])
+    h = jax.nn.relu(h)
+    skip = _conv(h, p["proj"], stride) if "proj" in p else x
+    h = _conv(h, p["conv1"], stride)
+    h = jax.nn.relu(_gn(h, p["gn2"]["s"], p["gn2"]["b"]))
+    h = _conv(h, p["conv2"], 1)
+    return h + skip
+
+
+def wrn28_init(key, cfg: WRNConfig, dtype=jnp.float32):
+    n = (cfg.depth - 4) // 6  # blocks per group
+    widths = [16, 16 * cfg.widen, 32 * cfg.widen, 64 * cfg.widen]
+    keys = jax.random.split(key, 2 + 3 * n)
+    params = {"stem": _conv_init(keys[0], 3, cfg.in_channels, widths[0], dtype)}
+    ki = 1
+    cin = widths[0]
+    for g in range(3):
+        for b in range(n):
+            params[f"g{g}b{b}"] = _wrn_block_init(keys[ki], cin, widths[g + 1], dtype)
+            cin = widths[g + 1]
+            ki += 1
+    params["gn_f"] = {"s": jnp.ones((cin,), dtype), "b": jnp.zeros((cin,), dtype)}
+    params["fc"] = {"w": dense_init(keys[ki], cin, cfg.n_classes, dtype),
+                    "b": jnp.zeros((cfg.n_classes,), dtype)}
+    return params
+
+
+def wrn28_apply(params, x, depth=28):
+    n = (depth - 4) // 6
+    x = _conv(x, params["stem"])
+    for g in range(3):
+        for b in range(n):
+            stride = 2 if (g > 0 and b == 0) else 1
+            x = _wrn_block_apply(params[f"g{g}b{b}"], x, stride)
+    x = jax.nn.relu(_gn(x, params["gn_f"]["s"], params["gn_f"]["b"]))
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SmallModel:
+    name: str
+    init: Callable[..., Any]
+    apply: Callable[..., Any]
+
+    def loss(self, params, batch):
+        logits = self.apply(params, batch["x"])
+        return cross_entropy(logits, batch["y"])
+
+    def accuracy(self, params, batch):
+        logits = self.apply(params, batch["x"])
+        return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+
+
+def build_small_model(cfg) -> SmallModel:
+    if isinstance(cfg, MLPConfig):
+        return SmallModel(cfg.name, lambda k: mlp3_init(k, cfg), mlp3_apply)
+    if isinstance(cfg, CNNConfig):
+        return SmallModel(cfg.name, lambda k: cnn6_init(k, cfg), cnn6_apply)
+    if isinstance(cfg, WRNConfig):
+        return SmallModel(cfg.name, lambda k: wrn28_init(k, cfg),
+                          lambda p, x: wrn28_apply(p, x, cfg.depth))
+    raise TypeError(cfg)

@@ -1,0 +1,88 @@
+"""Optimizers (pure JAX, no optax): SGD / momentum / AdamW with fp32 master
+weights (params may live in bf16; the master copy and moments are fp32).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (params, opt_state, grads, lr) -> (new_params, new_state)
+
+
+def _f32(tree):
+    # force a copy: fp32 params would otherwise alias the master buffer and
+    # break donation (same buffer donated twice)
+    return jax.tree.map(lambda x: jnp.array(x, jnp.float32, copy=True), tree)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return {"master": _f32(params)}
+
+    def update(params, state, grads, lr):
+        master = jax.tree.map(lambda m, g: m - lr * g.astype(jnp.float32),
+                              state["master"], grads)
+        new_params = jax.tree.map(lambda p, m: m.astype(p.dtype), params, master)
+        return new_params, {"master": master}
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"master": _f32(params),
+                "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(params, state, grads, lr):
+        mu = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        master = jax.tree.map(lambda m, v: m - lr * v, state["master"], mu)
+        new_params = jax.tree.map(lambda p, m: m.astype(p.dtype), params, master)
+        return new_params, {"master": master, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"master": _f32(params), "m": z,
+                "v": jax.tree.map(jnp.copy, z), "count": jnp.zeros((), jnp.int32)}
+
+    def update(params, state, grads, lr):
+        c = state["count"] + 1
+        g32 = _f32(grads)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], g32)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], g32)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def step(mst, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * mst
+            return mst - lr * upd
+
+        master = jax.tree.map(step, state["master"], m, v)
+        new_params = jax.tree.map(lambda p, mst: mst.astype(p.dtype), params, master)
+        return new_params, {"master": master, "m": m, "v": v, "count": c}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.name == "sgd":
+        return sgd()
+    if cfg.name == "momentum":
+        return momentum(cfg.beta1)
+    if cfg.name == "adamw":
+        return adamw(cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay)
+    raise ValueError(cfg.name)

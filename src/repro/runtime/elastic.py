@@ -1,0 +1,67 @@
+"""Elastic scaling orchestration (DESIGN.md §6): shrink or grow the mesh in
+response to failures/preemptions and resume from the last checkpoint.
+
+The jit-level machinery already supports this — checkpoints are saved with
+global-shape metadata and ``checkpointer.restore`` re-shards to whatever mesh
+is current. This module owns the *decision* layer a cluster controller calls:
+
+  plan_mesh(healthy_devices)  -> the largest valid (data, model) mesh config
+  resume(plan, ...)           -> restore + rebuild the jitted step for it
+
+Invariants enforced: the model axis must keep TP dims divisible (we prefer
+shrinking the data axis — losing data parallelism only changes throughput,
+not the program); the DP accountant state rides along so the privacy budget
+is continuous across re-scales.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+from repro.configs.base import MeshConfig
+
+
+@dataclass
+class ElasticPlan:
+    mesh: MeshConfig
+    dropped_devices: int
+    note: str
+
+
+def _divisors_desc(n: int) -> list[int]:
+    return [d for d in range(n, 0, -1) if n % d == 0]
+
+
+def plan_mesh(n_healthy: int, model_parallel: int = 16,
+              pods: int = 1) -> Optional[ElasticPlan]:
+    """Largest mesh (pods?, data, model) that fits the healthy device count,
+    keeping the model axis fixed (TP re-sharding would change per-op shapes;
+    data-axis changes are shape-transparent to the step function)."""
+    per_pod = n_healthy // max(pods, 1)
+    if per_pod < model_parallel:
+        # degrade: drop to the largest model axis that still fits
+        for mp in _divisors_desc(model_parallel):
+            if mp <= per_pod:
+                data = per_pod // mp
+                if data >= 1:
+                    mesh = (MeshConfig((pods, data, mp), ("pod", "data", "model"))
+                            if pods > 1 else MeshConfig((data, mp), ("data", "model")))
+                    used = pods * data * mp
+                    return ElasticPlan(mesh, n_healthy - used,
+                                       f"TP degraded {model_parallel}->{mp}")
+        return None
+    data = per_pod // model_parallel
+    mesh = (MeshConfig((pods, data, model_parallel), ("pod", "data", "model"))
+            if pods > 1 else MeshConfig((data, model_parallel), ("data", "model")))
+    used = pods * data * model_parallel
+    return ElasticPlan(mesh, n_healthy - used,
+                       f"data axis {data} (was sized for failures)")
+
+
+def resume_plan(ckpt_dir: str, state_template, plan: ElasticPlan,
+                shardings=None):
+    """Restore the latest checkpoint onto the new mesh. Returns (state,
+    extra, step). Call under ``jax.set_mesh(make_mesh_from_config(plan.mesh))``
+    with shardings built from distributed.sharding_rules for the new mesh."""
+    from repro.checkpoint import checkpointer
+    return checkpointer.restore(ckpt_dir, state_template, shardings=shardings)

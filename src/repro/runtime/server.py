@@ -1,0 +1,120 @@
+"""Confidential serving runtime: length-bucketed wave batching.
+
+The contiguous KV cache (models/attention.py) advances all batch rows in
+lockstep (one length per layer), so the scheduler batches requests into
+*waves*: requests are bucketed by prompt length, a wave of up to ``max_batch``
+same-length prompts is prefilled together, then decoded until every member
+finishes (early finishers are masked out, their slots produce dead tokens
+until the wave drains — the classic static-batching trade, measured by the
+``utilization`` stat). Length bucketing is the standard mitigation and keeps
+one compiled prefill/decode graph per bucket shape.
+
+Every wave gets a *fresh* cache: cross-request leakage through cache reuse is
+structurally impossible (the serving-side analogue of the paper's R2
+state-isolation requirement — a recycled slot never exposes a previous
+request's K/V).
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServerStats:
+    waves: int = 0
+    decode_steps: int = 0
+    useful_tokens: int = 0
+    slot_tokens: int = 0  # decode_steps x wave_batch
+
+    @property
+    def utilization(self) -> float:
+        return self.useful_tokens / max(self.slot_tokens, 1)
+
+
+class WaveServer:
+    """Batched prefill + decode waves over length-bucketed request queues."""
+
+    def __init__(self, model, params, max_batch: int = 8,
+                 max_len: int = 512, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.buckets: dict[int, collections.deque[Request]] = \
+            collections.defaultdict(collections.deque)
+        self.stats = ServerStats()
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(f"request {req.rid} exceeds max_len {self.max_len}")
+        self.buckets[len(req.prompt)].append(req)
+
+    def _next_wave(self) -> list[Request]:
+        if not self.buckets:
+            return []
+        # largest bucket first (best packing)
+        plen = max(self.buckets, key=lambda k: len(self.buckets[k]))
+        q = self.buckets[plen]
+        wave = [q.popleft() for _ in range(min(self.max_batch, len(q)))]
+        if not q:
+            del self.buckets[plen]
+        return wave
+
+    def _run_wave(self, wave: list[Request]) -> None:
+        B = len(wave)
+        plen = len(wave[0].prompt)
+        budget = max(r.max_new_tokens for r in wave)
+        cache = self.model.init_cache(B, plen + budget)  # fresh: R2 isolation
+
+        prompts = jnp.asarray(np.stack([r.prompt for r in wave]))
+        logits, cache = self._prefill(self.params, {"tokens": prompts}, cache)
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+
+        alive = np.ones(B, bool)
+        for step in range(budget):
+            toks = np.asarray(tok)
+            for i, r in enumerate(wave):
+                if not alive[i]:
+                    continue
+                t = int(toks[i, 0])
+                r.generated.append(t)
+                self.stats.useful_tokens += 1
+                if len(r.generated) >= r.max_new_tokens or \
+                        (r.eos_id is not None and t == r.eos_id):
+                    r.done = True
+                    alive[i] = False
+            self.stats.decode_steps += 1
+            self.stats.slot_tokens += B
+            if not alive.any() or step == budget - 1:
+                break
+            logits, cache = self._decode(self.params, {"tokens": tok}, cache)
+            tok = jnp.argmax(logits, axis=-1)[:, None]
+        for r in wave:
+            r.done = True
+        self.stats.waves += 1
+
+    def run_until_drained(self, max_waves: int = 1000) -> ServerStats:
+        while self.buckets and self.stats.waves < max_waves:
+            wave = self._next_wave()
+            if not wave:
+                break
+            self._run_wave(wave)
+        return self.stats

@@ -1,0 +1,52 @@
+"""Straggler mitigation (host-side).
+
+In SPMD training a straggling host stalls the whole collective. The policy
+here implements the standard production mitigations at the level the host
+loop controls:
+
+  * deadline tracking: a step exceeding ``deadline_s`` (or an EMA-based
+    adaptive deadline) is flagged; repeated flags trigger escalation,
+  * escalation hook: callback to the cluster layer (re-schedule the slow
+    host / shrink the mesh and restore elastically from the last checkpoint
+    — see checkpoint/checkpointer.py restore-to-any-mesh).
+
+On a real deployment the escalation callback talks to the job scheduler; in
+this container it records the decision (tested in tests/test_runtime.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+@dataclass
+class StragglerPolicy:
+    deadline_s: Optional[float] = None  # None -> adaptive (EMA * factor)
+    ema_factor: float = 3.0
+    escalate_after: int = 3
+    on_escalate: Optional[Callable[[dict], None]] = None
+    _ema: Optional[float] = None
+    _strikes: int = 0
+    events: list = field(default_factory=list)
+
+    def observe(self, step_time_s: float) -> bool:
+        """Returns True if this step was flagged as straggling."""
+        if self._ema is None:
+            self._ema = step_time_s
+        limit = self.deadline_s if self.deadline_s is not None \
+            else self._ema * self.ema_factor
+        flagged = step_time_s > limit
+        if flagged:
+            self._strikes += 1
+            self.events.append({"step_time_s": step_time_s, "limit": limit,
+                                "strikes": self._strikes})
+            if self._strikes >= self.escalate_after:
+                decision = {"action": "reschedule", "strikes": self._strikes}
+                self.events.append(decision)
+                if self.on_escalate:
+                    self.on_escalate(decision)
+                self._strikes = 0
+        else:
+            self._strikes = 0
+            self._ema = 0.9 * self._ema + 0.1 * step_time_s
+        return flagged

@@ -1,0 +1,127 @@
+"""Host-side training loop with fault tolerance: checkpoint/restart, DP-budget
+persistence, straggler deadlines, preemption handling.
+
+The inner step is the jitted CITADEL++ train step (distributed/steps.py); this
+loop owns everything jit can't: the accountant (its state must survive
+restarts — the privacy guarantee composes over *all* steps ever taken), the
+data-iterator state, checkpoint cadence, and wall-clock policies.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpointer
+from repro.configs.base import RunConfig
+from repro.core.accountant import PrivacyAccountant
+from repro.distributed import steps as steps_mod
+from repro.runtime.straggler import StragglerPolicy
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    # privacy budget stop: halt when epsilon(delta) exceeds this (the paper's
+    # "no further training is allowed by DP" semantics, Fig. 6)
+    epsilon_budget: Optional[float] = None
+    step_deadline_s: Optional[float] = None  # straggler deadline
+
+
+@dataclass
+class Trainer:
+    model: object
+    run_cfg: RunConfig
+    tcfg: TrainerConfig
+    next_batch: Callable[[], dict]
+    batch_state: Optional[object] = None  # object with state_dict/load_state_dict
+    mesh: Optional[object] = None
+    metrics_log: list = field(default_factory=list)
+    _preempted: bool = False
+
+    def __post_init__(self):
+        priv = self.run_cfg.privacy
+        self.accountant = PrivacyAccountant(
+            sigma=priv.sigma / max(1.0 - priv.noise_lambda, 1e-9),
+            delta=priv.delta, lam=priv.noise_lambda,
+            q=1.0, mode="analytic") if priv.enabled else None
+        self.straggler = StragglerPolicy(self.tcfg.step_deadline_s)
+        self.train_step = steps_mod.build_train_step(
+            self.model, self.run_cfg, abstract_mesh=self.mesh)
+        self._jit_step = jax.jit(self.train_step, donate_argnums=(0,))
+
+    # -- preemption --------------------------------------------------------
+    def install_preemption_handler(self):
+        def handler(signum, frame):
+            self._preempted = True
+        signal.signal(signal.SIGTERM, handler)
+
+    # -- checkpointing -----------------------------------------------------
+    def _save(self, state, step: int):
+        if not self.tcfg.checkpoint_dir:
+            return
+        extra = {
+            "accountant": self.accountant.state_dict() if self.accountant else None,
+            "batch_state": (self.batch_state.state_dict()
+                            if self.batch_state is not None else None),
+        }
+        checkpointer.save(self.tcfg.checkpoint_dir, step, state, extra)
+        checkpointer.garbage_collect(self.tcfg.checkpoint_dir,
+                                     self.tcfg.keep_checkpoints)
+
+    def try_restore(self, state):
+        """Resume from the latest complete checkpoint if one exists."""
+        if not self.tcfg.checkpoint_dir:
+            return state, 0
+        last = checkpointer.latest_step(self.tcfg.checkpoint_dir)
+        if last is None:
+            return state, 0
+        state, extra, step = checkpointer.restore(self.tcfg.checkpoint_dir, state)
+        if self.accountant and extra.get("accountant"):
+            self.accountant = PrivacyAccountant.from_state_dict(extra["accountant"])
+        if self.batch_state is not None and extra.get("batch_state"):
+            self.batch_state.load_state_dict(extra["batch_state"])
+        return state, step
+
+    # -- main loop ---------------------------------------------------------
+    def fit(self, state, root_key) -> tuple:
+        state, start = self.try_restore(state)
+        step = start
+        while step < self.tcfg.total_steps:
+            if self._preempted:
+                self._save(state, step)
+                return state, step
+            if (self.tcfg.epsilon_budget is not None and self.accountant
+                    and self.accountant.epsilon() >= self.tcfg.epsilon_budget):
+                break  # privacy budget exhausted: DP forbids further training
+
+            batch = self.next_batch()
+            t0 = time.time()
+            state, metrics = self._jit_step(state, batch, root_key)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.time() - t0
+            self.straggler.observe(dt)
+            if self.accountant:
+                self.accountant.step()
+                metrics["epsilon"] = self.accountant.epsilon()
+            metrics["step_time_s"] = dt
+            self.metrics_log.append({"step": step, **metrics})
+            step += 1
+            if step % self.tcfg.checkpoint_every == 0:
+                self._save(state, step)
+            if self.tcfg.log_every and step % self.tcfg.log_every == 0:
+                eps = metrics.get("epsilon")
+                print(f"step {step:6d} loss {metrics['loss']:.4f} "
+                      f"C {metrics['clip_bound']:.3f}"
+                      + (f" eps {eps:.3f}" if eps is not None else ""),
+                      flush=True)
+        self._save(state, step)
+        return state, step

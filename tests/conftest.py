@@ -1,0 +1,10 @@
+"""Test session config. NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches run on the 1 real CPU device; only launch/dryrun.py forces 512
+placeholder devices (in a subprocess for the dry-run test)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,87 @@
+"""Closed-form DP accounting checks against the paper's Appendix A."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import accountant as acc
+
+
+def test_gaussian_delta_matches_known_value():
+    # eps=0: delta = Phi(1/(2s)) - Phi(-1/(2s)) complement form;
+    # spot value via independent formula
+    d = acc.gaussian_delta(1.0, 1.0)
+    assert 0.1 < d < 0.2  # known ballpark for sigma=1, eps=1 (~0.126)
+    assert abs(d - 0.1258) < 5e-3
+
+
+def test_eps_delta_roundtrip():
+    for sigma in (0.7, 2.0, 10.0):
+        for steps in (1, 100, 1000):
+            eps = acc.composed_eps(1e-5, sigma, steps)
+            if math.isinf(eps):
+                continue
+            assert abs(acc.composed_delta(eps, sigma, steps) - 1e-5) < 1e-7
+
+
+def test_calibration_roundtrip():
+    sigma = acc.calibrate_sigma(1.0, 1e-5, steps=1000)
+    assert abs(acc.composed_eps(1e-5, sigma, 1000) - 1.0) < 1e-3
+
+
+def test_theorem1_noise_correction_equivalence():
+    """Thm 1: corrected mechanism at per-step scale sigma/(1-lam) == plain
+    composition at sigma (exactly, by construction of the bound)."""
+    for lam in (0.3, 0.7, 0.9):
+        plain = acc.composed_delta(2.0, 3.0, 500)
+        corr = acc.corrected_delta(2.0, 3.0 / (1 - lam), 500, lam)
+        assert abs(plain - corr) < 1e-12
+
+
+def test_sequence_sensitivity_lam0_is_sqrt_n():
+    for n in (1, 4, 16, 100):
+        assert abs(acc.sequence_sensitivity(n, 0.0) - math.sqrt(n)) < 1e-9
+
+
+def test_sequence_eps_correction_protects_updates():
+    """Fig. 14: at matched final-model guarantee (plain at sigma_t = (1-lam)s
+    vs corrected at s), the corrected mechanism gives smaller eps for short
+    windows of updates."""
+    sigma, lam, delta = 20.0, 0.7, 1e-5
+    for n in (1, 2, 4):
+        e_plain = acc.sequence_eps(delta, (1 - lam) * sigma, n, 0.0)
+        e_corr = acc.sequence_eps(delta, sigma, n, lam)
+        assert e_corr < e_plain
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.floats(0.5, 50.0), st.integers(1, 2000))
+def test_eps_monotone_in_steps_and_sigma(sigma, steps):
+    e1 = acc.composed_eps(1e-5, sigma, steps)
+    e2 = acc.composed_eps(1e-5, sigma, steps + 10)
+    e3 = acc.composed_eps(1e-5, sigma * 1.5, steps)
+    assert e2 >= e1 - 1e-9
+    assert e3 <= e1 + 1e-9
+
+
+def test_rdp_subsampled_sane():
+    a = acc.PrivacyAccountant(sigma=1.0, delta=1e-5, q=0.01, mode="rdp")
+    a.step(1)
+    e1 = a.epsilon()
+    a.step(999)
+    e2 = a.epsilon()
+    assert 0 < e1 < e2 < 50
+    # q=1 should roughly match analytic full-batch accounting
+    b = acc.PrivacyAccountant(sigma=5.0, delta=1e-5, q=1.0, mode="rdp")
+    b.step(100)
+    c = acc.PrivacyAccountant(sigma=5.0, delta=1e-5, mode="analytic")
+    c.step(100)
+    assert b.epsilon() >= c.epsilon() - 1e-6  # RDP is an upper bound
+    assert b.epsilon() < 2.0 * c.epsilon() + 0.5
+
+
+def test_state_roundtrip():
+    a = acc.PrivacyAccountant(sigma=2.0, delta=1e-5, lam=0.5, q=0.1, mode="rdp")
+    a.step(50)
+    b = acc.PrivacyAccountant.from_state_dict(a.state_dict())
+    assert abs(a.epsilon() - b.epsilon()) < 1e-12

@@ -1,0 +1,77 @@
+"""Clipping granularities + dynamic percentile protocol (paper §4.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clipping
+
+
+def test_clip_tree_bounds_norm():
+    g = {"a": jnp.ones((100,)) * 2.0, "b": jnp.ones((10, 10))}
+    clipped, pre = clipping.clip_tree(g, 1.0)
+    assert float(pre) > 1.0
+    assert abs(float(clipping.global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_clip_tree_noop_below_bound():
+    g = {"a": jnp.full((4,), 0.1)}
+    clipped, pre = clipping.clip_tree(g, 10.0)
+    np.testing.assert_allclose(np.asarray(clipped["a"]), 0.1, rtol=1e-6)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.floats(0.1, 10.0))
+def test_clip_idempotent(c):
+    g = {"a": jnp.arange(1.0, 9.0)}
+    once, _ = clipping.clip_tree(g, c)
+    twice, _ = clipping.clip_tree(once, c)
+    for x, y in zip(jax.tree.leaves(once), jax.tree.leaves(twice)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5)
+
+
+def test_per_example_clipping_matches_manual():
+    def loss(p, b):
+        return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+
+    key = jax.random.PRNGKey(0)
+    p = {"w": jax.random.normal(key, (4, 1))}
+    batch = {"x": jax.random.normal(key, (8, 4)),
+             "y": jax.random.normal(key, (8, 1))}
+    C = 0.5
+    summed, norms, _ = clipping.per_example_clipped_grad(loss, p, batch, C,
+                                                         impl="jnp")
+    # manual
+    manual = np.zeros((4, 1), np.float32)
+    for i in range(8):
+        ex = {k: v[i:i + 1] for k, v in batch.items()}
+        g = jax.grad(loss)(p, ex)["w"]
+        n = float(jnp.linalg.norm(g))
+        manual += np.asarray(g) * min(1.0, C / n)
+    np.testing.assert_allclose(np.asarray(summed["w"]), manual, rtol=1e-4)
+    assert norms.shape == (8,)
+
+
+def test_per_microbatch_clipping_shapes():
+    def loss(p, b):
+        return jnp.mean((b["x"] @ p["w"]) ** 2)
+
+    p = {"w": jnp.ones((4, 2))}
+    batch = {"x": jnp.ones((8, 4))}
+    summed, norms, _ = clipping.per_microbatch_clipped_grad(loss, p, batch, 1.0, 4)
+    assert norms.shape == (4,)
+    assert float(clipping.global_norm(summed)) <= 4.0 + 1e-4
+
+
+def test_dynamic_percentile_selection():
+    key = jax.random.PRNGKey(0)
+    # 4 silos, 5 percentiles each; admin picks r-th percentile of pool
+    pcts = jnp.stack([clipping.local_percentiles(
+        jnp.abs(jax.random.normal(jax.random.fold_in(key, i), (100,))) + i)
+        for i in range(4)])
+    c_lo = clipping.select_clip_bound(pcts, 0.25, key, dp_noise_scale=0.0)
+    c_hi = clipping.select_clip_bound(pcts, 0.9, key, dp_noise_scale=0.0)
+    assert float(c_lo) < float(c_hi)
+    c_cap = clipping.select_clip_bound(pcts, 0.9, key, dp_noise_scale=0.0,
+                                       upper_bound=0.1)
+    assert float(c_cap) <= 0.1 + 1e-6

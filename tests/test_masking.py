@@ -1,0 +1,122 @@
+"""Zero-sum DP masking properties (paper §4.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masking
+from repro.kernels.zsmask import ref as zref
+
+KEY_R = jnp.array([11, 22], jnp.uint32)
+KEY_XI = jnp.array([33, 44], jnp.uint32)
+
+
+def tmpl(shapes=((64,), (8, 8))):
+    return {f"p{i}": jnp.zeros(s, jnp.float32) for i, s in enumerate(shapes)}
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(2, 12))
+def test_pairwise_masks_telescope_to_zero(n):
+    """sigma=0: the r-terms must cancel across silos (within fp tolerance of
+    the wide-spread B-scale terms)."""
+    total = None
+    for i in range(n):
+        m = masking.pairwise_mask_only(tmpl(), KEY_R, KEY_XI, i, n,
+                                       sigma_c=0.0, b_scale=8.0)
+        total = m if total is None else jax.tree.map(jnp.add, total, m)
+    for leaf in jax.tree.leaves(total):
+        assert np.abs(np.asarray(leaf)).max() < 1e-4
+
+
+def test_pairwise_aggregate_noise_scale():
+    """sum_i m_i == xi with std sigma_c (paper property 1)."""
+    n, sigma_c = 8, 3.0
+    big = {"w": jnp.zeros((4096,), jnp.float32)}
+    total = None
+    for i in range(n):
+        m = masking.pairwise_mask_only(big, KEY_R, KEY_XI, i, n, sigma_c, 8.0)
+        total = m if total is None else jax.tree.map(jnp.add, total, m)
+    std = float(np.std(np.asarray(total["w"])))
+    assert abs(std - sigma_c) / sigma_c < 0.08
+
+
+def test_individual_mask_is_wide_spread():
+    """Property 2: a single masked gradient must look like wide noise — std
+    dominated by the B-scale r-terms, not the gradient."""
+    n, sigma_c, b = 8, 1.0, 16.0
+    g = {"w": jnp.ones((4096,), jnp.float32) * 0.01}
+    masked = masking.pairwise_mask_tree(g, KEY_R, KEY_XI, 3, n, sigma_c, b,
+                                        impl="jnp")
+    std = float(np.std(np.asarray(masked["w"])))
+    expected = np.sqrt(2 * b ** 2 + sigma_c ** 2 / n)
+    assert abs(std - expected) / expected < 0.1
+
+
+def test_collusion_leaves_full_dp_noise_on_honest_silo():
+    """Property 3: with n-1 colluders revealing their masks, the honest
+    silo's reconstruction is g_i + xi (all DP noise on it)."""
+    n, sigma_c = 4, 2.0
+    honest = 2
+    g = {"w": jnp.zeros((8192,), jnp.float32)}
+    agg = None
+    for i in range(n):
+        m = masking.pairwise_mask_only(g, KEY_R, KEY_XI, i, n, sigma_c, 8.0)
+        agg = m if agg is None else jax.tree.map(jnp.add, agg, m)
+    colluders = None
+    for i in range(n):
+        if i == honest:
+            continue
+        m = masking.pairwise_mask_only(g, KEY_R, KEY_XI, i, n, sigma_c, 8.0)
+        colluders = m if colluders is None else jax.tree.map(jnp.add, colluders, m)
+    residual = jax.tree.map(lambda a, c: a - c, agg, colluders)  # = m_honest
+    # the residual is the honest mask; its non-telescoped noise content has
+    # std >= sigma_c/sqrt(n) (plus the unpaired r-terms, which colluders DO
+    # know in the pairwise scheme only via their edge keys — structural
+    # property checked: residual std >> 0)
+    assert float(np.std(np.asarray(residual["w"]))) > sigma_c / np.sqrt(n)
+
+
+def test_admin_masks_sum_to_dp_noise():
+    key = jax.random.PRNGKey(5)
+    n, sigma_c = 6, 2.5
+    masks = masking.admin_masks(key, tmpl(((16384,),)), n, sigma_c, 16.0)
+    total = jax.tree.map(lambda m: m.sum(0), masks)
+    std = float(np.std(np.asarray(total["p0"])))
+    assert abs(std - sigma_c) / sigma_c < 0.08
+
+
+def test_apply_admin_mask_roundtrip():
+    key = jax.random.PRNGKey(1)
+    t = tmpl()
+    g = jax.tree.map(lambda x: x + 1.0, t)
+    masks = masking.admin_masks(key, t, 3, 1.0, 4.0)
+    agg = None
+    for i in range(3):
+        m = masking.apply_admin_mask(g, masks, i)
+        agg = m if agg is None else jax.tree.map(jnp.add, agg, m)
+    # aggregate = 3*g + xi
+    xi = jax.tree.map(lambda a, gg: a - 3 * gg, agg, g)
+    for leaf in jax.tree.leaves(xi):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_ring_masking_exact_cancellation():
+    """int32 ring masks wrap to exactly zero — no fp cancellation error."""
+    n = 5
+    key = jnp.array([7, 9], jnp.uint32)
+    g = {"w": jnp.zeros((1024,), jnp.int32)}
+    total = None
+    for i in range(n):
+        m = masking.ring_mask_tree(g, key, i, n)
+        total = m if total is None else jax.tree.map(
+            lambda a, b: a + b, total, m)
+    assert int(np.abs(np.asarray(total["w"])).max()) == 0
+
+
+def test_ring_quantization_roundtrip():
+    x = jnp.linspace(-0.9, 0.9, 101)
+    q = masking.to_ring(x, clip=1.0)
+    back = masking.from_ring(q, clip=1.0)
+    assert float(jnp.abs(back - x).max()) < 2.0 / (1 << masking.RING_SCALE_BITS)

@@ -1,0 +1,99 @@
+"""TEE-protocol simulation: attestation, KDS policy, channels, sandbox."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tee.attestation import (AttestationService, LaunchPolicy,
+                                        measure_modules)
+from repro.core.tee.channels import SecureChannel, derive_key, open_sealed, seal
+from repro.core.tee.kds import KeyDistributionService
+from repro.core.tee.sandbox import Sandbox, SandboxViolation
+
+
+def test_attestation_sign_verify():
+    svc = AttestationService()
+    pol = LaunchPolicy()
+    r = svc.issue("handler-0", "codehash", pol.hash(), "n1")
+    assert svc.verify(r)
+    forged = type(r)(r.component, "evilhash", r.policy_hash, r.nonce, r.signature)
+    assert not svc.verify(forged)
+
+
+def test_kds_releases_only_on_matching_measurement():
+    svc = AttestationService()
+    kds = KeyDistributionService(svc)
+    pol = LaunchPolicy()
+    kds.upload_key("dataset-0", b"k" * 32, "owner-a", "goodcode", pol.hash())
+    good = svc.issue("handler-0", "goodcode", pol.hash(), "n")
+    assert kds.request_key("dataset-0", good) == b"k" * 32
+    bad_code = svc.issue("handler-0", "badcode", pol.hash(), "n")
+    with pytest.raises(PermissionError):
+        kds.request_key("dataset-0", bad_code)
+    bad_policy = svc.issue("handler-0", "goodcode", "otherpolicy", "n")
+    with pytest.raises(PermissionError):
+        kds.request_key("dataset-0", bad_policy)
+
+
+def test_seal_open_and_tamper():
+    key = derive_key(b"master", "asset")
+    blob = seal(key, b"secret gradients", b"aad")
+    assert open_sealed(key, blob, b"aad") == b"secret gradients"
+    tampered = blob[:-1] + bytes([blob[-1] ^ 1])
+    with pytest.raises(ValueError, match="authentication"):
+        open_sealed(key, tampered, b"aad")
+    with pytest.raises(ValueError):
+        open_sealed(key, blob, b"wrong-aad")
+
+
+def test_channel_rejects_replay():
+    key = derive_key(b"m", "chan")
+    a = SecureChannel(key, "peer")
+    b = SecureChannel(key, "peer")
+    m1 = a.send(b"one")
+    m2 = a.send(b"two")
+    assert b.recv(m1) == b"one"
+    assert b.recv(m2) == b"two"
+    with pytest.raises(ValueError, match="replay"):
+        b.recv(m1)
+
+
+def test_sandbox_blocks_file_io():
+    sb = Sandbox()
+
+    def evil(params, data):
+        open("/tmp/exfil", "w").write("leak")  # noqa
+        return 0.0, params
+
+    with pytest.raises(SandboxViolation):
+        sb.run(evil, {}, {})
+
+
+def test_sandbox_blocks_os_import():
+    sb = Sandbox()
+
+    def evil(params, data):
+        import os  # noqa
+        return 0.0, params
+
+    with pytest.raises(SandboxViolation):
+        sb.run(evil, {}, {})
+
+
+def test_sandbox_allows_pure_jax_code():
+    sb = Sandbox()
+
+    def good(params, data):
+        import jax.numpy as jnp_
+        return float(jnp_.sum(params["w"])), params
+
+    loss, _ = sb.run(good, {"w": jnp.ones((3,))}, {})
+    assert loss == 3.0
+
+
+def test_measurement_changes_with_code():
+    import repro.core.barrier as b
+    import repro.core.masking as m
+    m1 = measure_modules([b, m])
+    m2 = measure_modules([m, b])
+    assert m1 != m2  # order-sensitive (deterministic chaining)
+    assert m1 == measure_modules([b, m])
