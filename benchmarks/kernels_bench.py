@@ -1,33 +1,50 @@
-"""Microbenchmarks of the Pallas-kernel ops vs their jnp oracles (interpret
-mode on CPU measures correctness-path overhead, not TPU speed; the roofline
-table covers TPU projections)."""
+"""Microbenchmarks of the kernel ops across every registered impl.
+
+Uses the dispatch registry's introspection (``available_impls``) to sweep
+each kernel's variants under identical inputs, so a newly registered impl
+shows up here with zero benchmark changes. Pallas variants run in interpret
+mode on CPU (correctness-path overhead, not TPU speed; the roofline table
+covers TPU projections) and are skipped off-TPU by default — set
+``BENCH_ALL_IMPLS=1`` to include them.
+"""
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
-from repro.kernels.dp_clip import ref as dref
-from repro.kernels.flash_attention import ref as fref
-from repro.kernels.flash_attention.blocked import flash_attention_xla
-from repro.kernels.rwkv6 import ref as rref
+from repro.kernels import available_impls
+from repro.kernels.dp_clip import ops as dops
+from repro.kernels.flash_attention import ops as fops
+from repro.kernels.mamba2 import ops as mops
+from repro.kernels.rwkv6 import ops as rops
+from repro.kernels.zsmask import ops as zops
+
+
+def _impls(kernel: str, include_pallas: bool) -> list[str]:
+    return [n for n in available_impls(kernel)
+            if include_pallas or n != "pallas"]
 
 
 def run():
+    include_pallas = bool(int(os.environ.get("BENCH_ALL_IMPLS", "0"))) \
+        or jax.default_backend() == "tpu"
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 5)
 
-    # flash attention (jnp blocked vs naive ref), train-ish shape
+    # flash attention, train-ish shape
     B, S, Hq, Hkv, D = 2, 1024, 8, 2, 64
     q = jax.random.normal(ks[0], (B, S, Hq, D))
     k = jax.random.normal(ks[1], (B, S, Hkv, D))
     v = jax.random.normal(ks[2], (B, S, Hkv, D))
-    f_ref = jax.jit(lambda a, b, c: fref.attention_ref(a, b, c, True))
-    f_blk = jax.jit(lambda a, b, c: flash_attention_xla(a, b, c, True, 256))
-    emit("kernels/attention_ref_s1024", timeit(f_ref, q, k, v))
-    emit("kernels/attention_flashxla_s1024", timeit(f_blk, q, k, v))
+    for impl in _impls("flash_attention", include_pallas):
+        f = jax.jit(lambda a, b, c, i=impl: fops.flash_attention(a, b, c, True,
+                                                                 impl=i))
+        emit(f"kernels/attention_{impl}_s{S}", timeit(f, q, k, v))
 
-    # rwkv chunked vs sequential
+    # rwkv6 wkv
     B, S, H, N = 2, 512, 4, 32
     r = jax.random.normal(ks[0], (B, S, H, N)) * 0.5
     kk = jax.random.normal(ks[1], (B, S, H, N)) * 0.5
@@ -35,15 +52,36 @@ def run():
     w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, N))) * 0.5 + 0.45
     u = jax.random.normal(ks[4], (H, N)) * 0.3
     s0 = jnp.zeros((B, H, N, N))
-    f_seq = jax.jit(lambda *a: rref.wkv_sequential(*a)[0])
-    f_chk = jax.jit(lambda *a: rref.wkv_chunked_jnp(*a)[0])
-    emit("kernels/rwkv_sequential_s512", timeit(f_seq, r, kk, vv, w, u, s0))
-    emit("kernels/rwkv_chunked_s512", timeit(f_chk, r, kk, vv, w, u, s0))
+    for impl in _impls("rwkv6_wkv", include_pallas):
+        f = jax.jit(lambda *a, i=impl: rops.wkv_chunked(*a, impl=i)[0])
+        emit(f"kernels/rwkv_{impl}_s{S}", timeit(f, r, kk, vv, w, u, s0))
+
+    # mamba2 ssd
+    B, S, nh, P, N = 2, 512, 4, 32, 32
+    xh = jax.random.normal(ks[0], (B, S, nh, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    la = -jnp.abs(jax.random.normal(ks[2], (B, S, nh))) * 0.5
+    Bc = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    Cc = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    h0 = jnp.zeros((B, nh, P, N))
+    for impl in _impls("mamba2_ssd", include_pallas):
+        f = jax.jit(lambda *a, i=impl: mops.ssd_chunked(*a, impl=i)[0])
+        emit(f"kernels/mamba2_{impl}_s{S}", timeit(f, xh, dt, la, Bc, Cc, h0))
 
     # dp_clip fused vs two-pass
     g = jax.random.normal(ks[0], (256, 8192))
-    f_ss = jax.jit(dref.per_example_sumsq_ref)
-    emit("kernels/dp_sumsq_256x8192", timeit(f_ss, g))
+    for impl in _impls("dp_clip_sumsq", include_pallas):
+        f = jax.jit(lambda a, i=impl: dops.sumsq(a, impl=i))
+        emit(f"kernels/dp_sumsq_{impl}_256x8192", timeit(f, g))
+
+    # zsmask
+    gflat = jax.random.normal(ks[0], (1 << 20,))
+    kr = jnp.array([123, 456], jnp.uint32)
+    kx = jnp.array([789, 12], jnp.uint32)
+    for impl in _impls("zsmask", include_pallas):
+        f = jax.jit(lambda a, i=impl: zops.apply_zsmask(
+            a, kr, kx, 0, 4, 1.0, 8.0, impl=i))
+        emit(f"kernels/zsmask_{impl}_1m", timeit(f, gflat))
 
 
 if __name__ == "__main__":

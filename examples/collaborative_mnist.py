@@ -8,18 +8,18 @@
   * the model updater only ever sees masked updates; the aggregate is
     DP-SGD-noisy; the accountant tracks the (eps, delta) budget
 
+All of that wiring lives in ``repro.api.CollaborativeSession``; this example
+just supplies the data, the model-owner code, and the training loop.
+
     PYTHONPATH=src python examples/collaborative_mnist.py
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import CollaborativeSession
 from repro.configs.base import PrivacyConfig
 from repro.configs.paper_models import MNIST_MLP3
-from repro.core.accountant import PrivacyAccountant
-from repro.core.tee.channels import SecureChannel, derive_key
-from repro.core.tee.components import (Admin, DataHandler, ManagementService,
-                                       ModelUpdater, _ser)
 from repro.data.synthetic import synthetic_mnist
 from repro.models.small import build_small_model
 
@@ -28,33 +28,14 @@ SIGMA = 0.5
 STEPS = 40
 
 print("=== CITADEL++ collaborative training (protocol tier) ===")
-svc = ManagementService()
-priv = PrivacyConfig(enabled=True, sigma=SIGMA, clip_bound=1.0)
-svc.create_session("demo", N_SILOS, priv)
-print(f"management service up; expected service-code measurement: "
-      f"{svc.expected_measurement()[:16]}…")
-
-# dataset owners upload keys after attesting the KDS; handlers attest back
 train, test = synthetic_mnist(n_train=4096, n_test=1024)
-handlers = []
-for i, silo in enumerate(train.split(N_SILOS)):
-    h = DataHandler(f"handler-{i}", svc, silo_idx=i,
-                    data={"x": jnp.asarray(silo.x), "y": jnp.asarray(silo.y)})
-    h.attest(svc.policy)
-    svc.kds.upload_key(f"dk-{i}", derive_key(b"session-root", f"dk-{i}"),
-                       f"hospital-{i}", svc.expected_measurement(),
-                       svc.policy.hash())
-    key = svc.kds.request_key(f"dk-{i}", h.report)  # released: attested OK
-    h.channel = SecureChannel(key, h.name)
-    handlers.append(h)
+sess = CollaborativeSession.from_silos(
+    [{"x": jnp.asarray(s.x), "y": jnp.asarray(s.y)} for s in train.split(N_SILOS)],
+    PrivacyConfig(enabled=True, sigma=SIGMA, clip_bound=1.0),
+    session_id="demo", root_seed=0)
+print(f"management service up; expected service-code measurement: "
+      f"{sess.expected_measurement[:16]}…")
 print(f"{N_SILOS} data handlers attested; keys released via KDS")
-
-updater = ModelUpdater("updater", svc)
-for h in handlers:
-    updater.channels[h.name] = SecureChannel(
-        svc.kds._records[f"dk-{h.silo_idx}"].key, h.name)
-admin = Admin("admin", svc, root_key=jax.random.PRNGKey(0))
-accountant = PrivacyAccountant(sigma=SIGMA, delta=1e-5)
 
 # the model owner's confidential code (runs sandboxed inside each handler)
 sm = build_small_model(MNIST_MLP3)
@@ -72,23 +53,16 @@ params = sm.init(jax.random.PRNGKey(1))
 test_b = {"x": jnp.asarray(test.x), "y": jnp.asarray(test.y)}
 
 for step in range(STEPS):
-    keys = admin.keys_for_step(step)  # 32-byte mask keys per silo per step
-    blob = _ser(params)
-    updates = {h.name: h.compute_update(blob, grad_fn, priv, keys, N_SILOS,
-                                        clip_bound=1.0)
-               for h in handlers}
-    params, loss = updater.aggregate(updates, params, update_fn, lr=0.5,
-                                     n_silos=N_SILOS)
-    accountant.step()
+    params, loss = sess.step(step, params, grad_fn, update_fn, lr=0.5)
     if step % 10 == 0 or step == STEPS - 1:
         acc = float(sm.accuracy(params, test_b))
         print(f"step {step:3d} loss={loss:.4f} test_acc={acc:.3f} "
-              f"eps={accountant.epsilon():.3f}")
+              f"eps={sess.epsilon():.3f}")
 
 # what did the updater actually see? masked noise, not gradients:
 w = np.concatenate([np.asarray(x).ravel()
-                    for x in jax.tree.leaves(updater.received_updates[-1])])
+                    for x in jax.tree.leaves(sess.updater.received_updates[-1])])
 print(f"\nlast wire update: std={w.std():.2f} (raw clipped grad scale ~1e-3) "
       f"-> the updater sees noise, the aggregate learns")
-print(f"privacy spent after {STEPS} steps: eps={accountant.epsilon():.3f} "
+print(f"privacy spent after {STEPS} steps: eps={sess.epsilon():.3f} "
       f"(delta=1e-5)")

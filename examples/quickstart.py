@@ -1,38 +1,25 @@
-"""Quickstart: train a model under the CITADEL++ privacy barrier in ~30 lines.
+"""Quickstart: train a model under the CITADEL++ privacy barrier in ~15 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
+from repro.api import Session
+from repro.configs.base import OptimizerConfig, PrivacyConfig
 
-from repro.configs import get_smoke_config
-from repro.configs.base import (MeshConfig, OptimizerConfig, PrivacyConfig,
-                                RunConfig, SHAPES)
-from repro.data.synthetic import synthetic_tokens
-from repro.distributed import steps as steps_mod
-from repro.models.registry import build_model
-
-# 1. pick an architecture (any of the 10 assigned ids; smoke-size here)
-cfg = get_smoke_config("qwen2.5-3b")
-model = build_model(cfg, compute_dtype=jnp.float32)
-
-# 2. configure the privacy barrier: 4 dataset owners, DP noise, dynamic
+# 1. pick an architecture (any of the 10 assigned ids; smoke-size here) and
+#    configure the privacy barrier: 4 dataset owners, DP noise, dynamic
 #    clipping, noise correction — all of paper §4 in one dataclass
-priv = PrivacyConfig(enabled=True, sigma=0.3, clip_bound=1.0,
-                     dynamic_clip=True, noise_lambda=0.7, n_silos=4)
-rc = RunConfig(model=cfg, shape=SHAPES["train_4k"],
-               mesh=MeshConfig((1,), ("data",)), privacy=priv,
-               optimizer=OptimizerConfig(name="adamw", lr=1e-3))
+sess = Session.from_config(
+    "qwen2.5-3b",
+    privacy=PrivacyConfig(enabled=True, sigma=0.3, clip_bound=1.0,
+                          dynamic_clip=True, noise_lambda=0.7, n_silos=4),
+    optimizer=OptimizerConfig(name="adamw", lr=1e-3))
 
-# 3. train
-state = steps_mod.init_train_state(model, rc, jax.random.PRNGKey(0))
-step = jax.jit(steps_mod.build_train_step(model, rc))
-toks = jnp.asarray(synthetic_tokens(64, 64, cfg.vocab_size))
-batch = {"tokens": toks[:16, :-1], "labels": toks[:16, 1:]}
+# 2. train — the Session owns model building, mesh wiring and the step loop
+result = sess.train(steps=20, batch_size=16, seq_len=64, log_every=5)
+print("final loss:", round(result.final["loss"], 4),
+      "| clip bound:", round(result.final["clip_bound"], 3))
 
-for i in range(20):
-    state, metrics = step(state, batch, jax.random.PRNGKey(42))
-    if i % 5 == 0:
-        print(f"step {i:3d} loss={float(metrics['loss']):.4f} "
-              f"C={float(metrics['clip_bound']):.3f}")
-print("final loss:", float(metrics["loss"]))
+# 3. the same session serves: batched prefill + greedy decode
+gen = sess.serve(batch_size=2, prompt_len=16, max_new_tokens=8,
+                 params=result.state.params)
+print("generated:", gen.tokens.tolist())

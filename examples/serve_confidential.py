@@ -1,60 +1,36 @@
 """Confidential serving example: load (encrypted) weights via the KDS gate,
-then run batched prefill + decode with the KV cache.
+then serve them through a ``repro.api.Session`` (batched prefill + greedy
+decode with the KV cache).
 
     PYTHONPATH=src python examples/serve_confidential.py
 """
-import time
-
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import get_smoke_config
+from repro.api import Session
 from repro.core.tee.attestation import LaunchPolicy
 from repro.core.tee.channels import derive_key, open_sealed, seal
-from repro.core.tee.components import ManagementService, _deser, _ser
-from repro.models.registry import build_model
+from repro.core.tee.components import Component, ManagementService, _deser, _ser
 
-ARCH = "qwen2.5-3b"
-cfg = get_smoke_config(ARCH)
-model = build_model(cfg, compute_dtype=jnp.float32)
+sess = Session.from_config("qwen2.5-3b")
 
 # --- model owner encrypts weights into untrusted storage -------------------
 svc = ManagementService()
 owner_key = derive_key(b"model-owner-master", "weights-v1")
-params = model.init(jax.random.PRNGKey(0))
+params = sess.model.init(jax.random.PRNGKey(0))
 svc.storage.put("model-v1", seal(owner_key, _ser(params)))
 svc.kds.upload_key("model-v1", owner_key, "model-owner",
                    svc.expected_measurement(), svc.policy.hash())
 print("encrypted model uploaded to untrusted storage")
 
 # --- serving component attests, gets the key, decrypts in its trust domain -
-from repro.core.tee.components import Component
 server = Component("server-0", svc)
 server.attest(LaunchPolicy())
 key = svc.kds.request_key("model-v1", server.report)
 params = _deser(open_sealed(key, svc.storage.get("model-v1")))
 print("server attested; weights decrypted inside the trust domain")
 
-# --- batched serve ----------------------------------------------------------
-B, PROMPT, GEN = 4, 32, 16
-cache = model.init_cache(B, PROMPT + GEN)
-prompt = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 0, cfg.vocab_size)
-prefill = jax.jit(model.prefill)
-decode = jax.jit(model.decode_step)
-
-t0 = time.perf_counter()
-logits, cache = prefill(params, {"tokens": prompt}, cache)
-jax.block_until_ready(logits)
-print(f"prefill({B}x{PROMPT}): {(time.perf_counter() - t0) * 1e3:.1f} ms")
-
-tok = jnp.argmax(logits, -1)[:, None]
-outs = []
-t0 = time.perf_counter()
-for _ in range(GEN):
-    outs.append(np.asarray(tok[:, 0]))
-    logits, cache = decode(params, {"tokens": tok}, cache)
-    tok = jnp.argmax(logits, -1)[:, None]
-jax.block_until_ready(logits)
-print(f"decode: {(time.perf_counter() - t0) / GEN * 1e3:.2f} ms/token")
-print("generated:", np.stack(outs, 1)[:2].tolist())
+# --- batched serve through the session façade -------------------------------
+res = sess.serve(batch_size=4, prompt_len=32, max_new_tokens=16, params=params)
+print(f"prefill(4x32): {res.prefill_s * 1e3:.1f} ms")
+print(f"decode: {res.decode_s_per_token * 1e3:.2f} ms/token")
+print("generated:", res.tokens[:2].tolist())

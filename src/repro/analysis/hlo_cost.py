@@ -129,12 +129,14 @@ def _operand_names(op: Op) -> list[str]:
             if depth == 0:
                 break
         buf += ch
+    if "%" in buf:
+        # typed-operand dialect: "dot(f32[32,32]{1,0} %lhs, ...)" — shape
+        # sigs contain commas, so take the %-prefixed names in order
+        return re.findall(r"%([\w.\-]+)", buf)
     names = []
     for tok in buf.split(","):
         tok = tok.strip()
-        if tok.startswith("%"):
-            names.append(tok[1:])
-        elif re.match(r"^[\w.\-]+$", tok):
+        if re.match(r"^[\w.\-]+$", tok):
             names.append(tok)
     return names
 

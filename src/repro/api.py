@@ -1,0 +1,314 @@
+"""Top-level session façade: ``Session.from_config(...).train(...)/.serve(...)``.
+
+One object owns the config → model → mesh → trainer/server wiring that the
+launchers, examples and benchmarks used to re-assemble by hand:
+
+    from repro.api import Session
+
+    sess = Session.from_config("qwen2.5-3b",
+                               privacy=PrivacyConfig(sigma=0.5, n_silos=4))
+    result = sess.train(steps=50, batch_size=8, seq_len=128)
+    print(result.final["loss"], result.final.get("epsilon"))
+
+    gen = sess.serve(batch_size=4, prompt_len=32, max_new_tokens=16)
+    print(gen.tokens[:2, :8])
+
+Arch ids accept both the assignment spelling (``qwen2.5-3b``) and the
+module-style spelling (``qwen25_3b``). ``Session`` is the integration point
+the dispatch registry, autotuning cache and additional backends plug into;
+kernel selection inside a session is still governed by
+``repro.kernels.dispatch`` (``force_impl`` / ``REPRO_KERNEL_IMPL``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config, resolve_arch
+from repro.configs.base import (MeshConfig, ModelConfig, OptimizerConfig,
+                                PrivacyConfig, RunConfig, ShapeConfig, SHAPES)
+from repro.data.synthetic import synthetic_tokens
+from repro.distributed import steps as steps_mod
+from repro.models.registry import Model, build_model
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+@dataclass
+class TrainResult:
+    """What a training run hands back: final state + the metrics history."""
+
+    state: Any
+    step: int
+    metrics: list
+    trainer: Trainer
+
+    @property
+    def final(self) -> dict:
+        return self.metrics[-1] if self.metrics else {}
+
+
+@dataclass
+class ServeResult:
+    """Greedy-decoded tokens + wall-clock timings."""
+
+    tokens: np.ndarray  # (B, max_new_tokens) int32
+    prefill_s: float
+    decode_s_per_token: float
+    logits: Any = None  # final-step logits (B, V)
+
+
+@dataclass
+class Session:
+    """A configured model + run wiring, ready to train or serve."""
+
+    cfg: ModelConfig
+    run_cfg: RunConfig
+    model: Model
+    seed: int = 0
+
+    # ------------------------------------------------------------------ ctor
+    @classmethod
+    def from_config(cls, arch: Union[str, ModelConfig], *, full: bool = False,
+                    privacy: Optional[PrivacyConfig] = None,
+                    optimizer: Optional[OptimizerConfig] = None,
+                    mesh: Optional[MeshConfig] = None,
+                    shape: Union[str, ShapeConfig] = "train_4k",
+                    compute_dtype=jnp.float32, seed: int = 0) -> "Session":
+        """Build a session from an arch id (or a ready ModelConfig).
+
+        ``full=False`` (default) loads the reduced smoke config — the full
+        published configs are sized for TPU deployments and dry-run-only on
+        CPU. Unspecified pieces get sensible single-host defaults: a 1-D data
+        mesh over all local devices, AdamW, privacy disabled unless a
+        PrivacyConfig is passed.
+        """
+        if isinstance(arch, ModelConfig):
+            cfg = arch
+        else:
+            arch = resolve_arch(arch)
+            cfg = get_config(arch) if full else get_smoke_config(arch)
+        model = build_model(cfg, compute_dtype=compute_dtype)
+        rc = RunConfig(
+            model=cfg,
+            shape=SHAPES[shape] if isinstance(shape, str) else shape,
+            mesh=mesh or MeshConfig((jax.device_count(),), ("data",)),
+            privacy=privacy if privacy is not None else PrivacyConfig(enabled=False),
+            optimizer=optimizer or OptimizerConfig(),
+        )
+        return cls(cfg=cfg, run_cfg=rc, model=model, seed=seed)
+
+    def with_run_config(self, **overrides) -> "Session":
+        """A copy of this session with RunConfig fields replaced."""
+        return replace(self, run_cfg=self.run_cfg.replace(**overrides))
+
+    # ----------------------------------------------------------------- train
+    def init_state(self, key=None):
+        key = jax.random.PRNGKey(self.seed) if key is None else key
+        return steps_mod.init_train_state(self.model, self.run_cfg, key)
+
+    def trainer(self, *, total_steps: int = 50, checkpoint_dir: Optional[str] = None,
+                checkpoint_every: int = 25, log_every: int = 10,
+                epsilon_budget: Optional[float] = None,
+                step_deadline_s: Optional[float] = None,
+                next_batch: Optional[Callable[[], dict]] = None,
+                batch_size: int = 8, seq_len: int = 128) -> Trainer:
+        """A wired Trainer; ``next_batch`` defaults to a synthetic LM stream."""
+        tcfg = TrainerConfig(total_steps=total_steps,
+                             checkpoint_every=checkpoint_every,
+                             checkpoint_dir=checkpoint_dir,
+                             log_every=log_every,
+                             epsilon_budget=epsilon_budget,
+                             step_deadline_s=step_deadline_s)
+        next_batch = next_batch or self.synthetic_batches(batch_size, seq_len)
+        return Trainer(self.model, self.run_cfg, tcfg, next_batch)
+
+    def train(self, *, steps: int = 50, batch_size: int = 8, seq_len: int = 128,
+              next_batch: Optional[Callable[[], dict]] = None,
+              checkpoint_dir: Optional[str] = None, checkpoint_every: int = 25,
+              log_every: int = 10, epsilon_budget: Optional[float] = None,
+              step_deadline_s: Optional[float] = None,
+              state=None) -> TrainResult:
+        """Run (or resume) training through the fault-tolerant Trainer loop."""
+        trainer = self.trainer(total_steps=steps, checkpoint_dir=checkpoint_dir,
+                               checkpoint_every=checkpoint_every,
+                               log_every=log_every, epsilon_budget=epsilon_budget,
+                               step_deadline_s=step_deadline_s,
+                               next_batch=next_batch, batch_size=batch_size,
+                               seq_len=seq_len)
+        state = state if state is not None else self.init_state()
+        state, step = trainer.fit(state, jax.random.PRNGKey(self.seed + 1))
+        return TrainResult(state=state, step=step,
+                           metrics=trainer.metrics_log, trainer=trainer)
+
+    def synthetic_batches(self, batch_size: int, seq_len: int,
+                          pool: Optional[int] = None) -> Callable[[], dict]:
+        """Deterministic synthetic LM batch stream (structured token stats)."""
+        toks = synthetic_tokens(pool or max(64, batch_size * 4), seq_len,
+                                self.cfg.vocab_size)
+        rng = np.random.default_rng(self.seed)
+
+        def next_batch():
+            idx = rng.integers(0, toks.shape[0], batch_size)
+            t = jnp.asarray(toks[idx])
+            return {"tokens": t[:, :-1], "labels": t[:, 1:]}
+
+        return next_batch
+
+    # ----------------------------------------------------------------- serve
+    def serve(self, *, batch_size: int = 4, prompt_len: int = 32,
+              max_new_tokens: int = 16, prompt=None, params=None) -> ServeResult:
+        """Batched prefill + greedy decode with the KV cache.
+
+        ``params`` lets callers bring externally-loaded weights (e.g.
+        decrypted through the KDS gate); fresh random init otherwise.
+        SSM-family archs prefill recurrently (decode over the prompt).
+        """
+        cfg = self.cfg
+        if not cfg.causal:
+            raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+        params = params if params is not None else self.model.init(
+            jax.random.PRNGKey(self.seed))
+        if prompt is None:
+            prompt = jax.random.randint(jax.random.PRNGKey(self.seed + 1),
+                                        (batch_size, prompt_len), 0,
+                                        cfg.vocab_size)
+        prompt = jnp.asarray(prompt)
+        batch_size, prompt_len = prompt.shape
+        cache = self.model.init_cache(batch_size, prompt_len + max_new_tokens)
+        prefill = jax.jit(self.model.prefill)
+        decode = jax.jit(self.model.decode_step)
+
+        t0 = time.perf_counter()
+        if cfg.family == "ssm":  # recurrent prefill = decode over the prompt
+            for t in range(prompt_len):
+                logits, cache = decode(params, {"tokens": prompt[:, t:t + 1]},
+                                       cache)
+        else:
+            logits, cache = prefill(params, {"tokens": prompt}, cache)
+        jax.block_until_ready(logits)
+        prefill_s = time.perf_counter() - t0
+
+        out = []
+        tok = jnp.argmax(logits, -1)[:, None]
+        t0 = time.perf_counter()
+        for _ in range(max_new_tokens):
+            out.append(np.asarray(tok[:, 0]))
+            logits, cache = decode(params, {"tokens": tok}, cache)
+            tok = jnp.argmax(logits, -1)[:, None]
+        jax.block_until_ready(logits)
+        decode_s = (time.perf_counter() - t0) / max(max_new_tokens, 1)
+
+        return ServeResult(tokens=np.stack(out, 1), prefill_s=prefill_s,
+                           decode_s_per_token=decode_s, logits=logits)
+
+    # --------------------------------------------------------- introspection
+    def kernel_impls(self) -> dict:
+        """Registered kernel impls (priority order) — what dispatch can pick."""
+        from repro import kernels
+
+        return {k: kernels.available_impls(k)
+                for k in kernels.REGISTRY.kernels()}
+
+
+@dataclass
+class CollaborativeSession:
+    """Protocol-tier façade (paper Fig. 1): a management service, KDS and
+    attested components wired for one collaborative-training session.
+
+    ``from_silos`` performs the full setup — deploy the service, attest each
+    dataset owner's data handler against the launch policy, upload + release
+    per-owner channel keys through the KDS, and connect the model updater —
+    so examples drive the training loop with one ``step()`` call per round.
+    The updater only ever sees masked updates; the accountant composes the
+    (eps, delta) budget over every round.
+    """
+
+    service: Any
+    privacy: PrivacyConfig
+    handlers: list
+    updater: Any
+    admin: Any
+    accountant: Any
+    n_silos: int
+    clip_bound: float = 1.0
+
+    @classmethod
+    def from_silos(cls, silo_data: list, privacy: PrivacyConfig, *,
+                   session_id: str = "session", root_seed: int = 0) -> "CollaborativeSession":
+        """``silo_data``: one batch dict per dataset owner (stays silo-local)."""
+        from repro.core.accountant import PrivacyAccountant
+        from repro.core.tee.channels import SecureChannel, derive_key
+        from repro.core.tee.components import (Admin, DataHandler,
+                                               ManagementService, ModelUpdater)
+
+        svc = ManagementService()
+        svc.create_session(session_id, len(silo_data), privacy)
+        handlers = []
+        for i, data in enumerate(silo_data):
+            h = DataHandler(f"handler-{i}", svc, silo_idx=i, data=data)
+            h.attest(svc.policy)
+            svc.kds.upload_key(f"dk-{i}", derive_key(b"session-root", f"dk-{i}"),
+                               f"owner-{i}", svc.expected_measurement(),
+                               svc.policy.hash())
+            key = svc.kds.request_key(f"dk-{i}", h.report)  # released: attested OK
+            h.channel = SecureChannel(key, h.name)
+            handlers.append(h)
+        updater = ModelUpdater("updater", svc)
+        for h in handlers:
+            updater.channels[h.name] = SecureChannel(
+                svc.kds._records[f"dk-{h.silo_idx}"].key, h.name)
+        admin = Admin("admin", svc, root_key=jax.random.PRNGKey(root_seed))
+        accountant = PrivacyAccountant(sigma=privacy.sigma, delta=privacy.delta)
+        return cls(service=svc, privacy=privacy, handlers=handlers,
+                   updater=updater, admin=admin, accountant=accountant,
+                   n_silos=len(silo_data), clip_bound=privacy.clip_bound)
+
+    def step(self, step_idx: int, params, grad_fn: Callable,
+             update_fn: Callable, lr: float):
+        """One round: admin keys -> silo updates (clip + zero-sum DP mask,
+        model-owner code sandboxed) -> updater aggregate. Returns
+        (new_params, mean_loss)."""
+        from repro.core.tee.components import _ser
+
+        keys = self.admin.keys_for_step(step_idx)
+        blob = _ser(params)
+        updates = {h.name: h.compute_update(blob, grad_fn, self.privacy, keys,
+                                            self.n_silos,
+                                            clip_bound=self.clip_bound)
+                   for h in self.handlers}
+        params, loss = self.updater.aggregate(updates, params, update_fn,
+                                              lr=lr, n_silos=self.n_silos)
+        self.accountant.step()
+        return params, loss
+
+    def epsilon(self) -> float:
+        return self.accountant.epsilon()
+
+    @property
+    def expected_measurement(self) -> str:
+        return self.service.expected_measurement()
+
+
+def train(arch: str, **kw) -> TrainResult:
+    """One-call convenience: ``repro.api.train("qwen2.5-3b", steps=10)``.
+
+    Session.from_config kwargs (full/privacy/optimizer/mesh/shape/seed) are
+    split off automatically; the rest go to :meth:`Session.train`.
+    """
+    ctor_keys = ("full", "privacy", "optimizer", "mesh", "shape",
+                 "compute_dtype", "seed")
+    ctor = {k: kw.pop(k) for k in ctor_keys if k in kw}
+    return Session.from_config(arch, **ctor).train(**kw)
+
+
+def serve(arch: str, **kw) -> ServeResult:
+    """One-call convenience: ``repro.api.serve("qwen2.5-3b", max_new_tokens=8)``."""
+    ctor_keys = ("full", "privacy", "optimizer", "mesh", "shape",
+                 "compute_dtype", "seed")
+    ctor = {k: kw.pop(k) for k in ctor_keys if k in kw}
+    return Session.from_config(arch, **ctor).serve(**kw)

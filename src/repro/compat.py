@@ -1,0 +1,103 @@
+"""jax version compatibility shims (single choke point).
+
+The codebase targets the current jax mesh/shard_map API; this container ships
+jax 0.4.37 where several of those entry points live elsewhere or take
+different keywords. Everything version-dependent goes through here so model
+and runtime code can stay on the modern spelling:
+
+* :func:`get_abstract_mesh` — ``jax.sharding.get_abstract_mesh`` when it
+  exists; otherwise the 0.4.x abstract-mesh context, falling back to the
+  ``with mesh:`` thread-resources context.
+* :func:`auto_axis_names` — mesh axes usable in sharding constraints
+  (``axis_types`` is None / absent on 0.4.x, meaning every axis is Auto).
+* :func:`make_mesh` — drops the ``axis_types`` kwarg where unsupported.
+* :func:`shard_map` — bridges ``axis_names=``/``check_vma=`` to the
+  ``jax.experimental.shard_map`` spelling (``auto=``/``check_rep=``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+# AxisType enum: public name on current jax, private AxisTypes on 0.4.x
+AxisType = getattr(jax.sharding, "AxisType", None)
+if AxisType is None:  # pragma: no cover - exercised only on old jax
+    from jax._src.mesh import AxisTypes as AxisType  # type: ignore
+
+
+def get_abstract_mesh():
+    """The mesh governing the current trace, or None outside any context."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        m = getter()
+        return m if m is not None and m.axis_names else None
+    from jax._src import mesh as _src_mesh
+
+    m = _src_mesh.get_abstract_mesh()
+    if m is not None and getattr(m, "axis_names", None):
+        return m
+    pm = _src_mesh.thread_resources.env.physical_mesh
+    if pm is not None and pm.axis_names:
+        return pm.abstract_mesh
+    return None
+
+
+def auto_axis_names(mesh) -> set:
+    """Axis names currently in Auto mode (usable in sharding constraints)."""
+    types = getattr(mesh, "axis_types", None)
+    if types is None:  # 0.4.x default: every axis is Auto
+        return set(mesh.axis_names)
+    if isinstance(types, dict):  # 0.4.x dict form: {AxisTypes: axis-or-axes}
+        auto = set()
+        for ty, axes in types.items():
+            if "Auto" in str(ty):
+                auto.update((axes,) if isinstance(axes, str) else tuple(axes))
+        return auto
+    return {n for n, ty in zip(mesh.axis_names, types) if "Auto" in str(ty)}
+
+
+def make_mesh(shape, axes, axis_types=None):
+    """jax.make_mesh, tolerating versions without the axis_types kwarg."""
+    if axis_types is not None:
+        try:
+            return jax.make_mesh(shape, axes, axis_types=axis_types)
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
+
+
+def axis_size(name):
+    """Size of a named mesh axis inside shard_map/pmap bodies."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(name)
+    return jax.lax.psum(1, name)
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh: ``jax.set_mesh``
+    where it exists, the classic ``with mesh:`` context otherwise."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh  # Mesh is itself a context manager on 0.4.x
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names: Optional[set] = None,
+              check_vma: bool = True):
+    """jax.shard_map with the modern keywords, on any supported jax."""
+    modern = getattr(jax, "shard_map", None)
+    if modern is not None:
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return modern(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as legacy
+
+    kw = {}
+    if axis_names is not None:  # legacy flag: the *auto* (non-manual) axes
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma, **kw)

@@ -37,10 +37,25 @@ _ARCH_MODULES: dict[str, str] = {
 ARCH_IDS: tuple[str, ...] = tuple(_ARCH_MODULES)
 
 
+def resolve_arch(arch: str) -> str:
+    """Canonical arch id from any accepted spelling: the assignment id
+    (``qwen2.5-3b``), the module-style name (``qwen25_3b``), or any
+    punctuation/case variant thereof."""
+    if arch in _ARCH_MODULES:
+        return arch
+
+    def norm(s: str) -> str:
+        return s.lower().replace("-", "").replace("_", "").replace(".", "")
+
+    n = norm(arch)
+    for key, mod in _ARCH_MODULES.items():
+        if n in (norm(key), norm(mod)):
+            return key
+    raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+
+
 def _module(arch: str):
-    if arch not in _ARCH_MODULES:
-        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
-    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[resolve_arch(arch)]}")
 
 
 def get_config(arch: str) -> ModelConfig:
@@ -82,6 +97,7 @@ __all__ = [
     "list_cells",
     "param_count",
     "reduce_for_smoke",
+    "resolve_arch",
     "runnable_cells",
     "shape_applicability",
 ]

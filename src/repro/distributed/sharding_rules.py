@@ -27,6 +27,8 @@ from typing import Optional, Sequence, Union
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 Axis = Union[None, str, tuple[str, ...]]
 
 RULES: dict[str, Axis] = {
@@ -47,10 +49,7 @@ RULES: dict[str, Axis] = {
 
 
 def _mesh():
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or not m.axis_names:
-        return None
-    return m
+    return compat.get_abstract_mesh()
 
 
 def _present_axes(mesh, axis: Axis) -> Optional[Axis]:
@@ -60,8 +59,7 @@ def _present_axes(mesh, axis: Axis) -> Optional[Axis]:
     if axis is None:
         return None
     names = (axis,) if isinstance(axis, str) else axis
-    auto = {n for n, t in zip(mesh.axis_names, mesh.axis_types)
-            if str(t).endswith("Auto")}
+    auto = compat.auto_axis_names(mesh)
     kept = tuple(a for a in names
                  if a in mesh.axis_names and mesh.shape[a] > 1 and a in auto)
     if not kept:

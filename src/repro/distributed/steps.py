@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import MeshConfig, PrivacyConfig, RunConfig
 from repro.core import barrier as barrier_mod
 from repro.core import clipping
@@ -178,7 +179,7 @@ def _barrier_grads(model: Model, priv: PrivacyConfig, mesh_cfg: MeshConfig,
         mult = 1
         for ax in reversed(silo_axes):
             idx = idx + jax.lax.axis_index(ax) * mult
-            mult *= jax.lax.axis_size(ax)
+            mult *= compat.axis_size(ax)
         loss, g = jax.value_and_grad(model.loss)(params, batch_local)
         norm = clipping.global_norm(g)
 
@@ -201,7 +202,7 @@ def _barrier_grads(model: Model, priv: PrivacyConfig, mesh_cfg: MeshConfig,
                       else P(silo_axes))
                   for k, v in batch.items()}
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         silo_fn,
         mesh=abstract_mesh,
         in_specs=(P(), batch_spec, P(), P(), P(), P(), P(), P()),
@@ -297,7 +298,7 @@ def state_pspecs(state: TrainState):
 def batch_pspec(batch, silo_axes=("pod", "data")):
     """Shard the batch dim over the silo axes where divisible; batch=1 shapes
     (long-context decode) fall back to sequence sharding / replication."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     n = 1
     axes = tuple(a for a in silo_axes
                  if mesh is not None and a in (mesh.axis_names or ()))

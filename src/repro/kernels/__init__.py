@@ -1,3 +1,28 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel packages + the shared dispatch registry.
+
+Importing this package registers every kernel variant (the five ops modules)
+with :data:`repro.kernels.dispatch.REGISTRY`, so introspection
+(``available_impls``) sees the full table. Selection overrides: the
+``force_impl`` context manager and the ``REPRO_KERNEL_IMPL`` env var — see
+``dispatch.py`` for the precedence rules.
+"""
+from repro.kernels.dispatch import (REGISTRY, available_impls, force_impl,
+                                    kernel_variant, on_tpu)
+from repro.kernels.dp_clip import ops as dp_clip_ops
+from repro.kernels.flash_attention import ops as flash_attention_ops
+from repro.kernels.mamba2 import ops as mamba2_ops
+from repro.kernels.rwkv6 import ops as rwkv6_ops
+from repro.kernels.zsmask import ops as zsmask_ops
+
+__all__ = [
+    "REGISTRY",
+    "available_impls",
+    "force_impl",
+    "kernel_variant",
+    "on_tpu",
+    "dp_clip_ops",
+    "flash_attention_ops",
+    "mamba2_ops",
+    "rwkv6_ops",
+    "zsmask_ops",
+]

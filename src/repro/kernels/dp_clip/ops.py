@@ -1,34 +1,49 @@
-"""Public API for fused per-example clipping."""
+"""Public API for fused per-example clipping, routed through the
+kernel-dispatch registry (two kernels: ``dp_clip_sumsq`` and
+``dp_clip_accumulate``)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import kernel_variant, on_tpu, REGISTRY
 from repro.kernels.dp_clip import ref
 from repro.kernels.dp_clip.dp_clip import clip_accumulate, per_example_sumsq
 
-
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except RuntimeError:
-        return False
+SUMSQ = "dp_clip_sumsq"
+ACCUM = "dp_clip_accumulate"
 
 
-def _impl(impl: str) -> str:
-    return ("pallas" if _on_tpu() else "jnp") if impl == "auto" else impl
+@kernel_variant(SUMSQ, "pallas", priority=100,
+                auto_predicate=lambda ctx: ctx["on_tpu"],
+                doc="fused Pallas per-example sum-of-squares")
+def _sumsq_pallas(g):
+    return per_example_sumsq(g, interpret=not on_tpu())
 
 
-def sumsq(g, impl: str = "auto"):
-    if _impl(impl) == "pallas":
-        return per_example_sumsq(g, interpret=not _on_tpu())
+@kernel_variant(SUMSQ, "jnp", priority=10, doc="jnp reference")
+def _sumsq_jnp(g):
     return ref.per_example_sumsq_ref(g)
 
 
-def clipped_sum(g, scale, impl: str = "auto"):
-    if _impl(impl) == "pallas":
-        return clip_accumulate(g, scale, interpret=not _on_tpu())
+@kernel_variant(ACCUM, "pallas", priority=100,
+                auto_predicate=lambda ctx: ctx["on_tpu"],
+                doc="fused Pallas clip-and-accumulate")
+def _accum_pallas(g, scale):
+    return clip_accumulate(g, scale, interpret=not on_tpu())
+
+
+@kernel_variant(ACCUM, "jnp", priority=10, doc="jnp reference")
+def _accum_jnp(g, scale):
     return ref.clip_accumulate_ref(g, scale)
+
+
+def sumsq(g, impl: str = "auto"):
+    return REGISTRY.dispatch(SUMSQ, impl, None, g)
+
+
+def clipped_sum(g, scale, impl: str = "auto"):
+    return REGISTRY.dispatch(ACCUM, impl, None, g, scale)
 
 
 def clip_and_sum_tree(grads_tree, clip_bound, impl: str = "auto"):

@@ -1,32 +1,44 @@
-"""Public fused-attention API: Pallas on TPU, jnp reference elsewhere."""
+"""Public fused-attention API, routed through the kernel-dispatch registry.
+
+``impl='auto'``: Pallas on TPU; on compiled CPU paths the custom-vjp blocked
+formulation (O(S) memory) above 2k sequence length, plain jnp below.
+"""
 from __future__ import annotations
 
-import jax
-
+from repro.kernels.dispatch import kernel_variant, on_tpu, REGISTRY
 from repro.kernels.flash_attention import ref
 from repro.kernels.flash_attention.blocked import flash_attention_xla
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
 
+KERNEL = "flash_attention"
 
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except RuntimeError:
-        return False
+
+@kernel_variant(KERNEL, "pallas", priority=100,
+                auto_predicate=lambda ctx: ctx["on_tpu"],
+                doc="fused Pallas kernel (interpret mode off-TPU)")
+def _pallas(q, k, v, causal=True):
+    return flash_attention_pallas(q, k, v, causal=causal, interpret=not on_tpu())
+
+
+@kernel_variant(KERNEL, "blocked", priority=50,
+                auto_predicate=lambda ctx: ctx["S"] >= 2048,
+                doc="custom-vjp blocked XLA path (O(S) memory)")
+def _blocked(q, k, v, causal=True):
+    return flash_attention_xla(q, k, v, causal)
+
+
+@kernel_variant(KERNEL, "blocked_naive", priority=20,
+                auto_predicate=lambda ctx: False,
+                doc="naive blocked reference (explicit request only)")
+def _blocked_naive(q, k, v, causal=True):
+    return ref.attention_blocked(q, k, v, causal=causal)
+
+
+@kernel_variant(KERNEL, "jnp", priority=10, doc="materialized-scores reference")
+def _jnp(q, k, v, causal=True):
+    return ref.attention_ref(q, k, v, causal=causal)
 
 
 def flash_attention(q, k, v, causal: bool = True, impl: str = "auto"):
-    if impl == "auto":
-        if _on_tpu():
-            impl = "pallas"
-        else:  # compiled CPU path: custom-vjp blocked (O(S) mem) above 2k
-            impl = "blocked" if k.shape[1] >= 2048 else "jnp"
-    if impl == "pallas":
-        return flash_attention_pallas(q, k, v, causal=causal, interpret=not _on_tpu())
-    if impl == "blocked":
-        return flash_attention_xla(q, k, v, causal)
-    if impl == "blocked_naive":
-        return ref.attention_blocked(q, k, v, causal=causal)
-    if impl == "jnp":
-        return ref.attention_ref(q, k, v, causal=causal)
-    raise ValueError(impl)
+    return REGISTRY.dispatch(KERNEL, impl, {"S": k.shape[1]},
+                             q, k, v, causal=causal)

@@ -1,29 +1,38 @@
-"""Public API for the Mamba-2 SSD scan."""
+"""Public API for the Mamba-2 SSD scan, routed through the kernel-dispatch
+registry. The Pallas variant requires ``S % chunk == 0``; other shapes fall
+back to the jnp chunked formulation."""
 from __future__ import annotations
 
-import jax
-
+from repro.kernels.dispatch import kernel_variant, on_tpu, REGISTRY
 from repro.kernels.mamba2 import ref
 from repro.kernels.mamba2.mamba2 import ssd_pallas
 
+KERNEL = "mamba2_ssd"
 
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except RuntimeError:
-        return False
+
+@kernel_variant(KERNEL, "pallas", priority=100,
+                predicate=lambda ctx: ctx["S"] % ctx["chunk"] == 0,
+                auto_predicate=lambda ctx: ctx["on_tpu"],
+                doc="fused Pallas SSD scan (S divisible by chunk)")
+def _pallas(xh, dt, la, Bc, Cc, h0, chunk=64):
+    return ssd_pallas(xh, dt, la, Bc, Cc, h0, chunk=chunk,
+                      interpret=not on_tpu())
+
+
+@kernel_variant(KERNEL, "jnp", priority=10, doc="chunked jnp formulation")
+def _jnp(xh, dt, la, Bc, Cc, h0, chunk=64):
+    return ref.ssd_chunked_jnp(xh, dt, la, Bc, Cc, h0, chunk=chunk)
+
+
+@kernel_variant(KERNEL, "sequential", priority=0,
+                auto_predicate=lambda ctx: False,
+                doc="step-by-step oracle (explicit request only)")
+def _sequential(xh, dt, la, Bc, Cc, h0, chunk=64):
+    return ref.ssd_sequential(xh, dt, la, Bc, Cc, h0)
 
 
 def ssd_chunked(xh, dt, la, Bc, Cc, h0, chunk: int = 64, impl: str = "auto"):
     S = xh.shape[1]
     chunk = min(chunk, S)
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
-    if impl == "pallas" and S % chunk == 0:
-        return ssd_pallas(xh, dt, la, Bc, Cc, h0, chunk=chunk,
-                          interpret=not _on_tpu())
-    if impl in ("pallas", "jnp"):
-        return ref.ssd_chunked_jnp(xh, dt, la, Bc, Cc, h0, chunk=chunk)
-    if impl == "sequential":
-        return ref.ssd_sequential(xh, dt, la, Bc, Cc, h0)
-    raise ValueError(impl)
+    return REGISTRY.dispatch(KERNEL, impl, {"S": S, "chunk": chunk},
+                             xh, dt, la, Bc, Cc, h0, chunk=chunk)

@@ -1,37 +1,51 @@
-"""Public API for the RWKV-6 WKV scan.
+"""Public API for the RWKV-6 WKV scan, routed through the kernel-dispatch
+registry.
 
-``impl='auto'`` picks the Pallas kernel on TPU backends and the jnp chunked
-formulation elsewhere (CPU dry-run / smoke tests). Both match the sequential
-oracle (see tests/test_kernels_rwkv6.py).
+``impl='auto'`` picks the Pallas kernel on TPU backends and the factored
+(MXU-friendly) jnp chunked formulation elsewhere (CPU dry-run / smoke tests).
+All variants match the sequential oracle (see tests/test_kernels.py). The
+Pallas variant requires ``S % chunk == 0``; other shapes fall back to jnp.
 """
 from __future__ import annotations
 
-import jax
-
+from repro.kernels.dispatch import kernel_variant, on_tpu, REGISTRY
 from repro.kernels.rwkv6 import ref
 from repro.kernels.rwkv6.rwkv6 import wkv_pallas
 
+KERNEL = "rwkv6_wkv"
 
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except RuntimeError:
-        return False
+
+@kernel_variant(KERNEL, "pallas", priority=100,
+                predicate=lambda ctx: ctx["S"] % ctx["chunk"] == 0,
+                auto_predicate=lambda ctx: ctx["on_tpu"],
+                doc="fused Pallas WKV scan (S divisible by chunk)")
+def _pallas(r, k, v, w, u, state0, chunk=32):
+    return wkv_pallas(r, k, v, w, u, state0, chunk=chunk,
+                      interpret=not on_tpu())
+
+
+@kernel_variant(KERNEL, "jnp", priority=10,
+                doc="factored (MXU) chunked form, §Perf iteration 3")
+def _jnp(r, k, v, w, u, state0, chunk=32):
+    return ref.wkv_chunked_factored(r, k, v, w, u, state0)
+
+
+@kernel_variant(KERNEL, "masked", priority=5,
+                auto_predicate=lambda ctx: False,
+                doc="masked chunked form (explicit request only)")
+def _masked(r, k, v, w, u, state0, chunk=32):
+    return ref.wkv_chunked_jnp(r, k, v, w, u, state0, chunk=chunk)
+
+
+@kernel_variant(KERNEL, "sequential", priority=0,
+                auto_predicate=lambda ctx: False,
+                doc="step-by-step oracle (explicit request only)")
+def _sequential(r, k, v, w, u, state0, chunk=32):
+    return ref.wkv_sequential(r, k, v, w, u, state0)
 
 
 def wkv_chunked(r, k, v, w, u, state0, chunk: int = 32, impl: str = "auto"):
     S = r.shape[1]
     chunk = min(chunk, S)
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
-    if impl == "pallas" and S % chunk == 0:
-        return wkv_pallas(r, k, v, w, u, state0, chunk=chunk, interpret=not _on_tpu())
-    if impl == "pallas":
-        impl = "jnp"
-    if impl == "jnp":  # compiled path: factored (MXU) form, §Perf iteration 3
-        return ref.wkv_chunked_factored(r, k, v, w, u, state0)
-    if impl == "masked":
-        return ref.wkv_chunked_jnp(r, k, v, w, u, state0, chunk=chunk)
-    if impl == "sequential":
-        return ref.wkv_sequential(r, k, v, w, u, state0)
-    raise ValueError(impl)
+    return REGISTRY.dispatch(KERNEL, impl, {"S": S, "chunk": chunk},
+                             r, k, v, w, u, state0, chunk=chunk)

@@ -1,26 +1,33 @@
-"""Public API for fused zero-sum mask apply."""
+"""Public API for fused zero-sum mask apply, routed through the
+kernel-dispatch registry. The Pallas variant takes whole flats only
+(``offset == 0``); sub-range calls fall back to the jnp reference."""
 from __future__ import annotations
 
-import jax
-
+from repro.kernels.dispatch import kernel_variant, on_tpu, REGISTRY
 from repro.kernels.zsmask import ref
 from repro.kernels.zsmask.zsmask import zsmask_pallas
 
+KERNEL = "zsmask"
 
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except RuntimeError:
-        return False
+
+@kernel_variant(KERNEL, "pallas", priority=100,
+                predicate=lambda ctx: ctx["offset"] == 0,
+                auto_predicate=lambda ctx: ctx["on_tpu"],
+                doc="fused Pallas mask-regenerate-in-VMEM (whole flats)")
+def _pallas(g, key_r, key_xi, silo, n_silos, sigma_c, b_scale, offset=0):
+    return zsmask_pallas(g, key_r, key_xi, silo, n_silos, sigma_c, b_scale,
+                         interpret=not on_tpu())
+
+
+@kernel_variant(KERNEL, "jnp", priority=10, doc="jnp reference (any offset)")
+def _jnp(g, key_r, key_xi, silo, n_silos, sigma_c, b_scale, offset=0):
+    return ref.zsmask_ref(g, key_r, key_xi, silo, n_silos, sigma_c, b_scale,
+                          offset)
 
 
 def apply_zsmask(g, key_r, key_xi, silo, n_silos: int, sigma_c, b_scale,
                  offset: int = 0, impl: str = "auto"):
     """g: flat (D,) -> g + m_silo (fp32). Bit-identical across impls."""
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
-    if impl == "pallas":
-        assert offset == 0, "pallas path takes whole flats"
-        return zsmask_pallas(g, key_r, key_xi, silo, n_silos, sigma_c, b_scale,
-                             interpret=not _on_tpu())
-    return ref.zsmask_ref(g, key_r, key_xi, silo, n_silos, sigma_c, b_scale, offset)
+    return REGISTRY.dispatch(KERNEL, impl, {"offset": offset},
+                             g, key_r, key_xi, silo, n_silos, sigma_c,
+                             b_scale, offset=offset)

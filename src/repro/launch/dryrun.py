@@ -54,8 +54,8 @@ def cache_pspecs(cache, mesh_cfg: MeshConfig):
             # when kv_heads < TP, put the model axis on the cache's seq dim
             # instead (§Perf iteration 4: mistral decode cache was 284GB/dev
             # with only batch-sharding — kv=8 can't fill model=16)
-            import jax as _jax
-            mesh = _jax.sharding.get_abstract_mesh()
+            from repro import compat as _compat
+            mesh = _compat.get_abstract_mesh()
             tp = mesh.shape.get("model", 1) if mesh and mesh.axis_names else 1
             seq_name = "seq_tp" if (x.shape[3] % max(tp, 1) != 0) else None
             if x.shape[1] % silo_n == 0 and x.shape[1] > 1:

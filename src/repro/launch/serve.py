@@ -1,20 +1,15 @@
 """Confidential serving launcher: prefill + batched decode with the KV cache
 (``python -m repro.launch.serve --arch <id> --tokens 32``).
 
-Same trust boundaries as training (attested components, encrypted assets);
-DP is a training-time mechanism so the barrier is N/A here (DESIGN.md §5).
+Thin CLI over :meth:`repro.api.Session.serve`. Same trust boundaries as
+training (attested components, encrypted assets); DP is a training-time
+mechanism so the barrier is N/A here (DESIGN.md §5).
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config, get_smoke_config
-from repro.models.registry import build_model
+from repro.api import Session
 
 
 def main():
@@ -26,44 +21,17 @@ def main():
     ap.add_argument("--tokens", type=int, default=16)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
-    if not cfg.causal:
-        raise SystemExit(f"{args.arch} is encoder-only: no decode step")
-    model = build_model(cfg, compute_dtype=jnp.float32)
-    params = model.init(jax.random.PRNGKey(0))
-    max_len = args.prompt_len + args.tokens
-    cache = model.init_cache(args.batch, max_len)
+    sess = Session.from_config(args.arch, full=args.full)
+    if not sess.cfg.causal:
+        raise SystemExit(f"{sess.cfg.name} is encoder-only: no decode step")
+    res = sess.serve(batch_size=args.batch, prompt_len=args.prompt_len,
+                     max_new_tokens=args.tokens)
 
-    prompt = jax.random.randint(jax.random.PRNGKey(1),
-                                (args.batch, args.prompt_len), 0, cfg.vocab_size)
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step)
-
-    t0 = time.perf_counter()
-    if cfg.family == "ssm":  # recurrent prefill = decode over the prompt
-        for t in range(args.prompt_len):
-            logits, cache = decode(params, {"tokens": prompt[:, t:t + 1]}, cache)
-    else:
-        logits, cache = prefill(params, {"tokens": prompt}, cache)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-
-    out = []
-    tok = jnp.argmax(logits, -1)[:, None]
-    t0 = time.perf_counter()
-    for i in range(args.tokens):
-        out.append(np.asarray(tok[:, 0]))
-        logits, cache = decode(params, {"tokens": tok}, cache)
-        tok = jnp.argmax(logits, -1)[:, None]
-    jax.block_until_ready(logits)
-    t_decode = time.perf_counter() - t0
-
-    gen = np.stack(out, 1)
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+    print(f"arch={sess.cfg.name} batch={args.batch} prompt={args.prompt_len} "
           f"gen={args.tokens}")
-    print(f"prefill: {t_prefill * 1e3:.1f} ms | decode: "
-          f"{t_decode / args.tokens * 1e3:.2f} ms/token")
-    print("first sequences:", gen[:2, :8].tolist())
+    print(f"prefill: {res.prefill_s * 1e3:.1f} ms | decode: "
+          f"{res.decode_s_per_token * 1e3:.2f} ms/token")
+    print("first sequences:", res.tokens[:2, :8].tolist())
 
 
 if __name__ == "__main__":

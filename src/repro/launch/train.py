@@ -1,24 +1,16 @@
 """Training launcher: ``python -m repro.launch.train --arch <id> [options]``.
 
-Runs real steps on the available devices (reduced smoke config by default —
-the full configs are dry-run-only on CPU). On a TPU deployment the same
-entrypoint runs the full config; the mesh comes from the runtime device set.
+Thin CLI over :class:`repro.api.Session` — runs real steps on the available
+devices (reduced smoke config by default; the full configs are dry-run-only
+on CPU). On a TPU deployment the same entrypoint runs the full config; the
+mesh comes from the runtime device set.
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config, get_smoke_config
-from repro.configs.base import (MeshConfig, OptimizerConfig, PrivacyConfig,
-                                RunConfig, SHAPES)
-from repro.data.synthetic import synthetic_tokens
-from repro.distributed import steps as steps_mod
-from repro.models.registry import build_model
-from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.api import Session
+from repro.configs.base import OptimizerConfig, PrivacyConfig
 
 
 def main():
@@ -40,33 +32,19 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
-    model = build_model(cfg, compute_dtype=jnp.float32)
-    priv = PrivacyConfig(enabled=not args.no_privacy, sigma=args.sigma,
-                         clip_bound=1.0, dynamic_clip=args.dynamic_clip,
-                         noise_lambda=args.lam, n_silos=args.silos,
-                         sync_path=args.sync_path)
-    rc = RunConfig(model=cfg, shape=SHAPES["train_4k"],
-                   mesh=MeshConfig((jax.device_count(),), ("data",)),
-                   privacy=priv,
-                   optimizer=OptimizerConfig(name="adamw", lr=args.lr))
-
-    toks = synthetic_tokens(max(64, args.batch * 4), args.seq, cfg.vocab_size)
-    rng = np.random.default_rng(0)
-
-    def next_batch():
-        idx = rng.integers(0, toks.shape[0], args.batch)
-        t = jnp.asarray(toks[idx])
-        return {"tokens": t[:, :-1], "labels": t[:, 1:]}
-
-    tcfg = TrainerConfig(total_steps=args.steps, checkpoint_every=25,
-                         checkpoint_dir=args.checkpoint_dir, log_every=10,
-                         epsilon_budget=args.epsilon_budget)
-    trainer = Trainer(model, rc, tcfg, next_batch)
-    state = steps_mod.init_train_state(model, rc, jax.random.PRNGKey(0))
-    state, step = trainer.fit(state, jax.random.PRNGKey(1))
-    final = trainer.metrics_log[-1] if trainer.metrics_log else {}
-    print(f"done at step {step}: loss={final.get('loss', float('nan')):.4f}"
+    sess = Session.from_config(
+        args.arch, full=args.full,
+        privacy=PrivacyConfig(enabled=not args.no_privacy, sigma=args.sigma,
+                              clip_bound=1.0, dynamic_clip=args.dynamic_clip,
+                              noise_lambda=args.lam, n_silos=args.silos,
+                              sync_path=args.sync_path),
+        optimizer=OptimizerConfig(name="adamw", lr=args.lr))
+    result = sess.train(steps=args.steps, batch_size=args.batch,
+                        seq_len=args.seq, checkpoint_dir=args.checkpoint_dir,
+                        checkpoint_every=25, log_every=10,
+                        epsilon_budget=args.epsilon_budget)
+    final = result.final
+    print(f"done at step {result.step}: loss={final.get('loss', float('nan')):.4f}"
           + (f" eps={final.get('epsilon'):.3f}" if "epsilon" in final else ""))
 
 

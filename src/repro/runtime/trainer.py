@@ -72,6 +72,9 @@ class Trainer:
             "accountant": self.accountant.state_dict() if self.accountant else None,
             "batch_state": (self.batch_state.state_dict()
                             if self.batch_state is not None else None),
+            # metrics history must survive preemption/restart, or the run's
+            # loss/epsilon curves silently truncate at the restore point
+            "metrics_log": list(self.metrics_log),
         }
         checkpointer.save(self.tcfg.checkpoint_dir, step, state, extra)
         checkpointer.garbage_collect(self.tcfg.checkpoint_dir,
@@ -89,6 +92,8 @@ class Trainer:
             self.accountant = PrivacyAccountant.from_state_dict(extra["accountant"])
         if self.batch_state is not None and extra.get("batch_state"):
             self.batch_state.load_state_dict(extra["batch_state"])
+        if extra.get("metrics_log"):
+            self.metrics_log = list(extra["metrics_log"])
         return state, step
 
     # -- main loop ---------------------------------------------------------

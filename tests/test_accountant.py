@@ -2,6 +2,7 @@
 import math
 
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; collection must not
 from hypothesis import given, settings, strategies as st
 
 from repro.core import accountant as acc

@@ -23,7 +23,7 @@ def run_script(body: str):
 
 BARRIER_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh, set_mesh
 from repro.configs import get_smoke_config
 from repro.configs.base import RunConfig, MeshConfig, PrivacyConfig, OptimizerConfig, SHAPES
 from repro.models.registry import build_model
@@ -31,7 +31,7 @@ from repro.distributed import steps as steps_mod
 from repro.core import barrier as barrier_mod, clipping
 from repro.core.noise_correction import init_state
 
-mesh = jax.make_mesh((2,2,2), ("pod","data","model"), axis_types=(AxisType.Auto,)*3)
+mesh = make_mesh((2,2,2), ("pod","data","model"), axis_types=(AxisType.Auto,)*3)
 cfg = get_smoke_config("qwen2.5-3b")
 model = build_model(cfg, compute_dtype=jnp.float32)
 mesh_cfg = MeshConfig((2,2,2), ("pod","data","model"))
@@ -43,7 +43,7 @@ key = jax.random.PRNGKey(0)
 B, S = 8, 32
 batch = {"tokens": jax.random.randint(key, (B,S), 0, cfg.vocab_size),
          "labels": jax.random.randint(key, (B,S), 0, cfg.vocab_size)}
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     state = steps_mod.init_train_state(model, rc, key)
     ts = jax.jit(steps_mod.build_train_step(model, rc, abstract_mesh=mesh))
     new_state, metrics = ts(state, batch, jax.random.PRNGKey(42))
@@ -61,7 +61,7 @@ noise = barrier_mod.aggregate_noise_from_streams(state.params, keys, n, 0.5*1.0)
 expect = jax.tree.map(lambda a,b: a + b, manual, noise)
 
 # recover the aggregate (lr=0 sgd keeps params; recompute noisy path)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     noisy, loss, norms, _, _ = jax.jit(lambda p, b: steps_mod._barrier_grads(
         model, priv, mesh_cfg, p, b, keys, state.noise_state,
         jnp.float32(1.0), keys.key_clip, mesh))(state.params, batch)
@@ -75,14 +75,16 @@ print("OK")
 
 DRYRUN_SCRIPT = r"""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+from repro.compat import AxisType, make_mesh, set_mesh
 from repro.configs import get_smoke_config
 from repro.configs.base import RunConfig, MeshConfig, PrivacyConfig, OptimizerConfig, SHAPES
 from repro.models.registry import build_model
 from repro.distributed import steps as steps_mod
+from repro.distributed.sharding_rules import named_shardings
 from repro.analysis.hlo_cost import analyze
 
-mesh = jax.make_mesh((2,2,2), ("pod","data","model"), axis_types=(AxisType.Auto,)*3)
+mesh = make_mesh((2,2,2), ("pod","data","model"), axis_types=(AxisType.Auto,)*3)
 mesh_cfg = MeshConfig((2,2,2), ("pod","data","model"))
 for arch in ("qwen2.5-3b", "phi3.5-moe-42b-a6.6b", "rwkv6-7b"):
     cfg = get_smoke_config(arch)
@@ -91,13 +93,14 @@ for arch in ("qwen2.5-3b", "phi3.5-moe-42b-a6.6b", "rwkv6-7b"):
                          silo_mode="scan", n_silos=2)
     rc = RunConfig(model=cfg, shape=SHAPES["train_4k"], mesh=mesh_cfg, privacy=priv)
     step = steps_mod.build_train_step(model, rc, abstract_mesh=mesh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state_sds = jax.eval_shape(lambda: steps_mod.init_train_state(model, rc, jax.random.PRNGKey(0)))
         st_specs = steps_mod.state_pspecs(state_sds)
         batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
                  "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
         b_specs = steps_mod.batch_pspec(batch, mesh_cfg.silo_axes)
-        lowered = jax.jit(step, in_shardings=(st_specs, b_specs, P()),
+        in_sh = named_shardings(mesh, (st_specs, b_specs, P()))
+        lowered = jax.jit(step, in_shardings=in_sh,
                           donate_argnums=(0,)).lower(
             state_sds, batch, jax.ShapeDtypeStruct((2,), jnp.uint32))
         compiled = lowered.compile()
