@@ -1,13 +1,22 @@
-"""Shared benchmark utilities. CSV rows: name,us_per_call,derived."""
+"""Shared benchmark utilities. CSV rows: name,us_per_call,derived — plus a
+machine-readable record stream written out as ``BENCH_kernels.json``."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 
+# every emit() appends here; run.py serializes the collected records
+RECORDS: list[dict] = []
+
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall time per call in microseconds (jitted fn, blocked)."""
+    """Median wall time per call in microseconds. The warmup calls run (and
+    block on) the function first so compile time is excluded from the timed
+    iterations; every timed call is bracketed by ``block_until_ready`` so
+    async dispatch can't under-report."""
+    assert warmup >= 1, "warmup must run at least once to exclude compile"
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -21,5 +30,21 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def emit(name: str, us: float, derived: str = "") -> None:
+def emit(name: str, us: float, derived: str = "", impl: str = "",
+         shape: str = "") -> None:
+    RECORDS.append({"name": name, "us_per_call": round(us, 3), "impl": impl,
+                    "shape": shape, "derived": derived})
     print(f"{name},{us:.1f},{derived}")
+
+
+def write_json(path: str = "BENCH_kernels.json",
+               prefix: str = "kernels/") -> None:
+    """name -> {us_per_call, impl, shape} for the collected kernel records.
+    Only rows under ``prefix`` are written, so a full-section run doesn't
+    pollute the kernel-microbenchmark artifact with fig*/roofline rows."""
+    data = {r["name"]: {"us_per_call": r["us_per_call"], "impl": r["impl"],
+                        "shape": r["shape"]}
+            for r in RECORDS if r["name"].startswith(prefix)}
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    print(f"# wrote {path} ({len(data)} entries)")

@@ -6,6 +6,10 @@ shows up here with zero benchmark changes. Pallas variants run in interpret
 mode on CPU (correctness-path overhead, not TPU speed; the roofline table
 covers TPU projections) and are skipped off-TPU by default — set
 ``BENCH_ALL_IMPLS=1`` to include them.
+
+The ``dp_tree`` section is the headline perf comparison for the packed
+flat-buffer DP engine: per-leaf dispatch (2+ launches per pytree leaf) vs
+the packed path (O(1) dispatches over one flat buffer) across leaf counts.
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
+from repro.core import masking
 from repro.kernels import available_impls
 from repro.kernels.dp_clip import ops as dops
 from repro.kernels.flash_attention import ops as fops
@@ -26,6 +31,14 @@ from repro.kernels.zsmask import ops as zops
 def _impls(kernel: str, include_pallas: bool) -> list[str]:
     return [n for n in available_impls(kernel)
             if include_pallas or n != "pallas"]
+
+
+def _synthetic_tree(key, n_leaves: int, B: int, elem: int) -> dict:
+    """Per-example gradient pytree with ``n_leaves`` leaves of slightly
+    varied, deliberately lane-unaligned sizes."""
+    ks = jax.random.split(key, n_leaves)
+    return {f"w{i}": jax.random.normal(ks[i], (B, elem + 32 * (i % 3) + 1))
+            for i in range(n_leaves)}
 
 
 def run():
@@ -42,7 +55,8 @@ def run():
     for impl in _impls("flash_attention", include_pallas):
         f = jax.jit(lambda a, b, c, i=impl: fops.flash_attention(a, b, c, True,
                                                                  impl=i))
-        emit(f"kernels/attention_{impl}_s{S}", timeit(f, q, k, v))
+        emit(f"kernels/attention_{impl}_s{S}", timeit(f, q, k, v),
+             impl=impl, shape=f"B={B},S={S},Hq={Hq},Hkv={Hkv},D={D}")
 
     # rwkv6 wkv
     B, S, H, N = 2, 512, 4, 32
@@ -54,7 +68,8 @@ def run():
     s0 = jnp.zeros((B, H, N, N))
     for impl in _impls("rwkv6_wkv", include_pallas):
         f = jax.jit(lambda *a, i=impl: rops.wkv_chunked(*a, impl=i)[0])
-        emit(f"kernels/rwkv_{impl}_s{S}", timeit(f, r, kk, vv, w, u, s0))
+        emit(f"kernels/rwkv_{impl}_s{S}", timeit(f, r, kk, vv, w, u, s0),
+             impl=impl, shape=f"B={B},S={S},H={H},N={N}")
 
     # mamba2 ssd
     B, S, nh, P, N = 2, 512, 4, 32, 32
@@ -66,22 +81,77 @@ def run():
     h0 = jnp.zeros((B, nh, P, N))
     for impl in _impls("mamba2_ssd", include_pallas):
         f = jax.jit(lambda *a, i=impl: mops.ssd_chunked(*a, impl=i)[0])
-        emit(f"kernels/mamba2_{impl}_s{S}", timeit(f, xh, dt, la, Bc, Cc, h0))
+        emit(f"kernels/mamba2_{impl}_s{S}", timeit(f, xh, dt, la, Bc, Cc, h0),
+             impl=impl, shape=f"B={B},S={S},nh={nh},P={P},N={N}")
 
-    # dp_clip fused vs two-pass
+    # dp_clip fused vs two-pass (single block)
     g = jax.random.normal(ks[0], (256, 8192))
     for impl in _impls("dp_clip_sumsq", include_pallas):
         f = jax.jit(lambda a, i=impl: dops.sumsq(a, impl=i))
-        emit(f"kernels/dp_sumsq_{impl}_256x8192", timeit(f, g))
+        emit(f"kernels/dp_sumsq_{impl}_256x8192", timeit(f, g),
+             impl=impl, shape="B=256,D=8192")
 
-    # zsmask
+    # zsmask (single flat buffer)
     gflat = jax.random.normal(ks[0], (1 << 20,))
     kr = jnp.array([123, 456], jnp.uint32)
     kx = jnp.array([789, 12], jnp.uint32)
     for impl in _impls("zsmask", include_pallas):
         f = jax.jit(lambda a, i=impl: zops.apply_zsmask(
             a, kr, kx, 0, 4, 1.0, 8.0, impl=i))
-        emit(f"kernels/zsmask_{impl}_1m", timeit(f, gflat))
+        emit(f"kernels/zsmask_{impl}_1m", timeit(f, gflat),
+             impl=impl, shape="D=1048576")
+
+    # packed flat-buffer engine vs per-leaf dispatch across leaf counts:
+    # the DP hot path on synthetic gradient pytrees. dp_tree isolates the
+    # clip+sum op; zsmask_tree isolates the mask; dp_pipeline is the headline
+    # comparison — the full per-step clip+sum+corrected-noise composition as
+    # the step builders run it (packed stays packed between the ops, so the
+    # pack/unpack cost is paid once per step, not once per op).
+    from repro.core import barrier as barrier_mod, flatbuf
+    from repro.core.noise_correction import NoiseState
+    from repro.configs.base import PrivacyConfig
+
+    priv = PrivacyConfig(enabled=True, sigma=0.5, clip_bound=1.0,
+                         noise_lambda=0.7)
+    keys = barrier_mod.step_keys(jax.random.PRNGKey(1), jnp.zeros((), jnp.int32))
+    nstate = NoiseState(prev_key=jnp.array([9, 9], jnp.uint32),
+                        has_prev=jnp.ones((), jnp.bool_))
+    B = 8
+    for n_leaves in (8, 64, 256):
+        tree = _synthetic_tree(ks[3], n_leaves, B, 64)
+        shape = f"leaves={n_leaves},B={B}"
+        for impl in ("perleaf", "packed"):
+            f = jax.jit(lambda t, i=impl: dops.clip_and_sum_tree(t, 1.0,
+                                                                 impl=i)[0])
+            emit(f"kernels/dp_tree_{impl}_l{n_leaves}", timeit(f, tree),
+                 impl=impl, shape=shape)
+        elem_tree = {k: v[0] for k, v in tree.items()}
+        for impl in ("perleaf", "packed"):
+            f = jax.jit(lambda t, i=impl: masking.pairwise_mask_tree(
+                t, kr, kx, 0, 4, 1.0, 8.0, impl=i))
+            emit(f"kernels/zsmask_tree_{impl}_l{n_leaves}",
+                 timeit(f, elem_tree), impl=impl, shape=shape)
+
+        def pipeline_perleaf(t):
+            summed, norms = dops.clip_and_sum_tree(t, 1.0, impl="perleaf")
+            noisy, _ = barrier_mod.fused_noise(summed, priv, keys, nstate,
+                                               1.0, impl="perleaf")
+            return noisy
+
+        def pipeline_packed(t):
+            lay = flatbuf.layout_of(t, batch_dims=1)
+            from repro.kernels.dp_fused import ops as fused_ops
+            summed, norms = fused_ops.clip_sum_packed(flatbuf.pack(lay, t), 1.0)
+            noisy, _ = barrier_mod.fused_noise_packed(summed, priv, keys,
+                                                      nstate, 1.0)
+            return flatbuf.unpack(lay, noisy, dtype=jnp.float32)
+
+        emit(f"kernels/dp_pipeline_perleaf_l{n_leaves}",
+             timeit(jax.jit(pipeline_perleaf), tree), impl="perleaf",
+             shape=shape)
+        emit(f"kernels/dp_pipeline_packed_l{n_leaves}",
+             timeit(jax.jit(pipeline_packed), tree), impl="packed",
+             shape=shape)
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (barrier_latency, barrier_overhead,
+    from benchmarks import (barrier_latency, barrier_overhead, common,
                             dynamic_clipping, kernels_bench, noise_correction,
                             privacy_utility, roofline, sota_comparison)
     print("name,us_per_call,derived")
@@ -43,6 +43,8 @@ def main() -> None:
             failures += 1
             print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
+    if any(r["name"].startswith("kernels/") for r in common.RECORDS):
+        common.write_json("BENCH_kernels.json")
     if failures:
         sys.exit(1)
 

@@ -2,15 +2,22 @@
 and corrected DP noise around the gradient synchronization step.
 
 Two numerically-equivalent paths (DESIGN.md §2), both exposed to the step
-builders in distributed/steps.py:
+builders in distributed/steps.py, and both now running on the packed
+flat-buffer engine (core/flatbuf + kernels/dp_fused):
 
 * ``barrier_sync``  — paper-faithful: runs *inside* shard_map manual over the
-  silo axes. Per-silo clip -> per-silo zero-sum mask -> explicit psum. The
-  masked per-silo gradients exist on the wire exactly as in the paper.
+  silo axes. The whole clip -> zero-sum mask -> lambda-corrected noise
+  pipeline is ONE fused dispatch over the silo's packed gradient buffer
+  (``dp_fused_clip_mask``), and the explicit psum runs on the packed buffer
+  (one collective instead of one per pytree leaf). The masked per-silo
+  gradients exist on the wire exactly as in the paper.
 * ``fused_noise``   — beyond-paper: per-silo clipping via vmap under pjit,
   masks elided (they cancel in the aggregate), corrected DP noise injected
-  once post-reduce. Identical aggregate distribution; XLA fuses the noise add
-  into the reduce epilogue.
+  once post-reduce. The tree-level kernel ``dp_noise_tree`` picks between the
+  packed engine (noise regenerated in VMEM from 32-byte keys) and the legacy
+  per-leaf jax.random path — the per-leaf variant stays load-bearing for the
+  FSDP-sharded scan accumulator, where packing would gather the full
+  parameter buffer onto every device.
 """
 from __future__ import annotations
 
@@ -20,8 +27,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import PrivacyConfig
-from repro.core import clipping, masking, noise_correction
+from repro.core import clipping, flatbuf, masking, noise_correction
 from repro.core.noise_correction import NoiseState
+from repro.kernels.dispatch import kernel_variant, REGISTRY
+from repro.kernels.dp_fused import ops as fused_ops
 
 
 class BarrierKeys(NamedTuple):
@@ -86,26 +95,54 @@ def dynamic_bound_from_percentiles(percentiles_all, priv: PrivacyConfig, key):
 
 
 def barrier_sync(g, silo, n_silos: int, priv: PrivacyConfig, keys: BarrierKeys,
-                 noise_state: NoiseState, clip_bound, axis_names=("pod", "data")):
-    """Per-silo: mask; all: psum over silo axes. Returns the aggregate
-    (sum g_i + sigma*C*(xi_t - lam*xi_{t-1})) and the new noise state."""
+                 noise_state: NoiseState, clip_bound, axis_names=("pod", "data"),
+                 scale=None):
+    """Per-silo: clip (when ``scale`` is given) + mask + lambda correction in
+    one fused dispatch over the packed buffer; all: one psum of the packed
+    buffer over the silo axes. Returns the aggregate
+    (sum_i scale_i*g_i + sigma*C*(xi_t - lam*xi_{t-1})) and the new state."""
     sigma_c = priv.sigma * clip_bound
+    scale_ = jnp.asarray(1.0 if scale is None else scale, jnp.float32)
+
+    def scaled(tree):
+        return jax.tree.map(
+            lambda x: (x.astype(jnp.float32) * scale_).astype(x.dtype), tree)
+
     if priv.mask_mode == "pairwise":
-        masked = masking.pairwise_mask_tree(
-            g, keys.key_r, keys.key_xi, silo, n_silos,
-            sigma_c, priv.mask_scale * sigma_c)
-        if priv.noise_lambda > 0.0:
-            prev = masking.pairwise_mask_only(
-                g, keys.key_r, noise_state.prev_key, silo, n_silos,
-                sigma_c, 0.0)
-            gate = jnp.where(noise_state.has_prev, priv.noise_lambda, 0.0)
-            masked = jax.tree.map(
-                lambda m, p: m - gate * p.astype(m.dtype), masked, prev)
+        # packed by default; an explicit force_impl / REPRO_KERNEL_IMPL
+        # override of zsmask_tree to perleaf/jnp falls back to the legacy
+        # per-leaf construction (different — equally valid — stream family;
+        # note aggregate_noise_from_streams models the packed construction)
+        variant = REGISTRY.resolve(masking.TREE, "packed",
+                                   fused_ops.tree_ctx(g)).name
+        if variant in ("perleaf", "jnp"):
+            clipped = scaled(g)
+            masked = masking.pairwise_mask_tree(
+                clipped, keys.key_r, keys.key_xi, silo, n_silos,
+                sigma_c, priv.mask_scale * sigma_c, impl=variant)
+            if priv.noise_lambda > 0.0:
+                prev = masking.pairwise_mask_only(
+                    g, keys.key_r, noise_state.prev_key, silo, n_silos,
+                    sigma_c, 0.0, impl=variant)
+                gate = jnp.where(noise_state.has_prev, priv.noise_lambda, 0.0)
+                masked = jax.tree.map(
+                    lambda m, p: m - gate * p.astype(m.dtype), masked, prev)
+            agg = jax.lax.psum(masked, axis_names)
+        else:
+            layout = flatbuf.layout_of(g)
+            packed = flatbuf.pack(layout, g)
+            lam_gate = jnp.where(noise_state.has_prev, priv.noise_lambda, 0.0)
+            masked = fused_ops.clip_mask_packed(
+                packed, scale_, masking._raw(keys.key_r),
+                masking._raw(keys.key_xi), noise_state.prev_key, silo,
+                n_silos, sigma_c, priv.mask_scale * sigma_c, lam_gate,
+                use_pairwise=True, use_prev=priv.noise_lambda > 0.0,
+                impl="pallas" if variant == "pallas" else "auto")
+            agg = flatbuf.unpack(layout, jax.lax.psum(masked, axis_names))
     elif priv.mask_mode == "none":
-        masked = g
+        agg = jax.lax.psum(scaled(g), axis_names)
     else:
         raise ValueError(f"barrier path supports pairwise|none, got {priv.mask_mode}")
-    agg = jax.lax.psum(masked, axis_names)
     new_state = NoiseState(prev_key=masking._raw(keys.key_xi),
                            has_prev=jnp.ones((), jnp.bool_))
     return agg, new_state
@@ -114,11 +151,39 @@ def barrier_sync(g, silo, n_silos: int, priv: PrivacyConfig, keys: BarrierKeys,
 # ---------------------------------------------------------------------------
 # Fused path (post-reduce aggregate noise under pjit)
 
+NOISE = "dp_noise_tree"
 
-def fused_noise(g_sum, priv: PrivacyConfig, keys: BarrierKeys,
-                noise_state: NoiseState, clip_bound):
-    """g_sum: already-aggregated clipped gradient sum. Adds corrected DP noise
-    xi_t - lam*xi_{t-1} at scale sigma*C."""
+
+def fused_noise_packed(g_packed, priv: PrivacyConfig, keys: BarrierKeys,
+                       noise_state: NoiseState, clip_bound, impl: str = "auto"):
+    """Corrected DP noise added directly on a packed (P,) buffer: one fused
+    dispatch, noise regenerated in VMEM (n_silos=1 stream of key_xi, scale
+    sigma*C; the pairwise r-terms are statically elided)."""
+    sigma_c = priv.sigma * clip_bound
+    lam_gate = jnp.where(noise_state.has_prev, priv.noise_lambda, 0.0)
+    kx = masking._raw(keys.key_xi)
+    noisy = fused_ops.clip_mask_packed(
+        g_packed, 1.0, kx, kx, noise_state.prev_key, jnp.int32(0), 1,
+        sigma_c, 0.0, lam_gate, use_pairwise=False,
+        use_prev=priv.noise_lambda > 0.0, impl=impl)
+    new_state = NoiseState(prev_key=kx, has_prev=jnp.ones((), jnp.bool_))
+    return noisy, new_state
+
+
+@kernel_variant(NOISE, "packed", priority=100,
+                auto_predicate=fused_ops.prefers_packed,
+                doc="packed flat-buffer corrected noise, one fused dispatch")
+def _noise_packed(g_sum, priv, keys, noise_state, clip_bound, inner="auto"):
+    layout = flatbuf.layout_of(g_sum)
+    packed = flatbuf.pack(layout, g_sum)
+    noisy, new_state = fused_noise_packed(packed, priv, keys, noise_state,
+                                          clip_bound, impl=inner)
+    return flatbuf.unpack(layout, noisy), new_state
+
+
+@kernel_variant(NOISE, "perleaf", priority=50,
+                doc="per-leaf jax.random noise (keeps FSDP sharding)")
+def _noise_perleaf(g_sum, priv, keys, noise_state, clip_bound, inner="auto"):
     sigma_c = priv.sigma * clip_bound
     noise, new_state = noise_correction.corrected_noise(
         g_sum, keys.key_xi, noise_state, sigma_c, priv.noise_lambda)
@@ -127,14 +192,39 @@ def fused_noise(g_sum, priv: PrivacyConfig, keys: BarrierKeys,
     return noisy, new_state
 
 
+@kernel_variant(NOISE, "pallas", priority=20,
+                doc="legacy name: packed engine, Pallas inner kernel")
+def _noise_pallas(g_sum, priv, keys, noise_state, clip_bound):
+    return _noise_packed(g_sum, priv, keys, noise_state, clip_bound,
+                         inner="pallas")
+
+
+@kernel_variant(NOISE, "jnp", priority=10,
+                doc="legacy name: per-leaf jax.random noise")
+def _noise_jnp(g_sum, priv, keys, noise_state, clip_bound):
+    return _noise_perleaf(g_sum, priv, keys, noise_state, clip_bound)
+
+
+def fused_noise(g_sum, priv: PrivacyConfig, keys: BarrierKeys,
+                noise_state: NoiseState, clip_bound, impl: str = "auto"):
+    """g_sum: already-aggregated clipped gradient sum. Adds corrected DP noise
+    xi_t - lam*xi_{t-1} at scale sigma*C."""
+    return REGISTRY.dispatch(NOISE, impl, fused_ops.tree_ctx(g_sum),
+                             g_sum, priv, keys, noise_state, clip_bound)
+
+
 def aggregate_noise_from_streams(template, keys: BarrierKeys, n_silos: int,
                                  sigma_c):
-    """Test helper: the exact sum of the pairwise path's noise streams
-    (sum_i sigma_c/sqrt(n) xi_i; r-terms telescope to zero). Bit-matches the
-    barrier path aggregate noise."""
+    """Test helper: the exact sum of the packed barrier path's noise streams
+    (sum_i sigma_c/sqrt(n) xi_i over the packed layout; r-terms telescope to
+    zero). Bit-matches the barrier path aggregate noise."""
+    layout = flatbuf.layout_of(template)
+    kx = masking._raw(keys.key_xi)
+    zeros = jnp.zeros((layout.total,), jnp.float32)
     total = None
     for i in range(n_silos):
-        m = masking.pairwise_mask_only(template, keys.key_r, keys.key_xi,
-                                       i, n_silos, sigma_c, 0.0)
-        total = m if total is None else jax.tree.map(jnp.add, total, m)
-    return total
+        m = fused_ops.clip_mask_packed(
+            zeros, 1.0, kx, kx, kx, jnp.int32(i), n_silos, sigma_c, 0.0, 0.0,
+            use_pairwise=False, use_prev=False, impl="jnp")
+        total = m if total is None else total + m
+    return flatbuf.unpack(layout, total, dtype=jnp.float32)

@@ -21,10 +21,17 @@ def global_norm(tree) -> jax.Array:
                         for g in jax.tree.leaves(tree)))
 
 
+def clip_scale(norm, clip_bound) -> jax.Array:
+    """DP-SGD clip factor min(1, C/||g||) — the one shared definition
+    (epsilon included) so the vmap/scan/barrier paths stay in exact
+    numerical agreement. ``norm`` may be a scalar or a vector of norms."""
+    return jnp.minimum(1.0, clip_bound / jnp.maximum(norm, 1e-12))
+
+
 def clip_tree(tree, clip_bound) -> tuple:
     """Scale the whole tree to norm <= clip_bound. Returns (tree, pre_norm)."""
     norm = global_norm(tree)
-    scale = jnp.minimum(1.0, clip_bound / jnp.maximum(norm, 1e-12))
+    scale = clip_scale(norm, clip_bound)
     return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
 
 

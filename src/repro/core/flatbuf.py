@@ -1,0 +1,118 @@
+"""Packed flat-buffer gradient engine: one fp32 buffer per pytree.
+
+The DP hot path (clip -> zero-sum mask -> corrected noise) used to launch
+2+ kernels *per pytree leaf* — hundreds of HBM-bound dispatches per step on
+transformer configs. A :class:`PackedLayout` is computed once per tree
+structure (leaf offsets, fp32 padding to lane multiples) and turns the whole
+pipeline into O(1) dispatches over a single ``(B, P_padded)`` buffer that the
+fused kernels in ``repro.kernels.dp_fused`` sweep in one pass.
+
+Layout rules:
+
+* every leaf is flattened and zero-padded to a multiple of ``lane`` (128,
+  the TPU lane width) so each leaf starts lane-aligned;
+* the total is zero-padded to a multiple of ``align`` (1024) so the fused
+  kernels' D-blockings always divide it;
+* padding stays exactly zero through pack -> kernel -> unpack, so packed
+  norms/sums match the per-leaf path up to fp reassociation.
+
+Layouts are static (hashable, cached per treedef x shapes x dtypes) and are
+resolved at trace time — ``pack``/``unpack`` are ordinary jnp ops that XLA
+fuses into neighbouring computation, and both work under vmap/shard_map.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128      # leaf starts stay lane-aligned (fp32 lane width)
+ALIGN = 1024    # total padded size divides every fused-kernel D-block
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class PackedLayout:
+    """Static description of one pytree flattened into a single fp32 buffer."""
+
+    treedef: Any
+    shapes: tuple  # per-leaf element shapes (leading batch dims stripped)
+    dtypes: tuple  # per-leaf dtype names, restored by default on unpack
+    sizes: tuple
+    padded: tuple
+    offsets: tuple
+    total: int     # padded buffer length (multiple of ALIGN)
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.shapes)
+
+    @property
+    def n_params(self) -> int:
+        return sum(self.sizes)
+
+
+@functools.lru_cache(maxsize=256)
+def _build_layout(treedef, shapes, dtypes, lane: int, align: int) -> PackedLayout:
+    sizes = tuple(math.prod(s) if s else 1 for s in shapes)
+    padded = tuple(_round_up(max(s, 1), lane) for s in sizes)
+    offsets, off = [], 0
+    for p in padded:
+        offsets.append(off)
+        off += p
+    total = _round_up(off, align)
+    return PackedLayout(treedef, shapes, dtypes, sizes, padded,
+                        tuple(offsets), total)
+
+
+def layout_of(tree, batch_dims: int = 0, lane: int = LANE,
+              align: int = ALIGN) -> PackedLayout:
+    """Layout for ``tree``; ``batch_dims`` leading axes of every leaf are
+    treated as batch (stripped from the element shapes)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        raise ValueError("cannot build a PackedLayout for an empty tree")
+    shapes = tuple(tuple(l.shape[batch_dims:]) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype).name for l in leaves)
+    return _build_layout(treedef, shapes, dtypes, lane, align)
+
+
+def pack(layout: PackedLayout, tree) -> jax.Array:
+    """Flatten ``tree`` into one fp32 buffer of shape ``lead + (total,)``.
+    Leading (batch) axes are inferred per leaf from the layout's element
+    shapes; padding positions are exactly zero.
+
+    Implemented as dynamic_update_slice writes into a zero buffer rather
+    than pad+concatenate — XLA lowers the former to in-place copies (~9x
+    faster on CPU for many-leaf trees, identical on TPU)."""
+    leaves = jax.tree.leaves(tree)
+    lead = leaves[0].shape[:leaves[0].ndim - len(layout.shapes[0])]
+    buf = jnp.zeros(lead + (layout.total,), jnp.float32)
+    for leaf, shape, size, off in zip(leaves, layout.shapes, layout.sizes,
+                                      layout.offsets):
+        nlead = leaf.ndim - len(shape)
+        if tuple(leaf.shape[nlead:]) != shape:
+            raise ValueError(
+                f"leaf shape {leaf.shape} does not end with layout shape {shape}")
+        flat = leaf.reshape(leaf.shape[:nlead] + (size,)).astype(jnp.float32)
+        buf = jax.lax.dynamic_update_slice(buf, flat, (0,) * nlead + (off,))
+    return buf
+
+
+def unpack(layout: PackedLayout, buf: jax.Array, dtype: Optional[Any] = None):
+    """Inverse of :func:`pack` over the trailing axis. Leaves are cast to the
+    layout's recorded dtypes, or to ``dtype`` when given."""
+    lead = buf.shape[:-1]
+    leaves = []
+    for shape, dt, size, off in zip(layout.shapes, layout.dtypes,
+                                    layout.sizes, layout.offsets):
+        piece = jax.lax.slice_in_dim(buf, off, off + size, axis=buf.ndim - 1)
+        leaves.append(piece.reshape(lead + shape).astype(dtype or dt))
+    return jax.tree.unflatten(layout.treedef, leaves)

@@ -20,6 +20,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import kernel_variant, REGISTRY
+from repro.kernels.dp_fused import ops as fused_ops
 from repro.kernels.zsmask import ops as zs_ops
 
 
@@ -32,14 +34,20 @@ def _raw(key: jax.Array) -> jax.Array:
 
 # ---------------------------------------------------------------------------
 # Pairwise masks (key-derived, zero distribution traffic)
+#
+# Tree-level kernel ``zsmask_tree``: the packed variant flattens the whole
+# pytree into one flat buffer (core/flatbuf) and regenerates the mask in a
+# single fused dispatch with *global packed indices* as threefry counters;
+# the per-leaf variant keeps the legacy one-dispatch-per-leaf construction
+# (leaf index folded into the keys). The two draw different — equally valid —
+# stream families, so all silos of a session must resolve to the same
+# variant; both are deterministic functions of (layout, keys, silo).
+
+TREE = "zsmask_tree"
 
 
-def pairwise_mask_tree(grads, key_r, key_xi, silo, n_silos: int, sigma_c,
-                       b_scale: float, impl: str = "auto"):
-    """Apply m_silo to every leaf of ``grads`` (flattened per leaf).
-    silo may be a traced scalar (lax.axis_index); keys are per-step."""
-    kr = _raw(key_r)
-    kx = _raw(key_xi)
+def _mask_tree_perleaf(grads, kr, kx, silo, n_silos, sigma_c, b_scale,
+                       impl: str = "auto"):
     leaves, treedef = jax.tree.flatten(grads)
     out = []
     for i, g in enumerate(leaves):
@@ -51,6 +59,43 @@ def pairwise_mask_tree(grads, key_r, key_xi, silo, n_silos: int, sigma_c,
                                      sigma_c, b_scale, impl=impl)
         out.append(masked.reshape(g.shape).astype(g.dtype))
     return jax.tree.unflatten(treedef, out)
+
+
+@kernel_variant(TREE, "packed", priority=100,
+                auto_predicate=fused_ops.prefers_packed,
+                doc="packed flat-buffer mask: one fused dispatch per tree")
+def _mask_tree_packed(grads, kr, kx, silo, n_silos, sigma_c, b_scale):
+    return fused_ops.packed_mask_tree(grads, kr, kx, silo, n_silos, sigma_c,
+                                      b_scale)
+
+
+@kernel_variant(TREE, "perleaf", priority=50,
+                doc="per-leaf dispatch (legacy stream construction)")
+def _mask_tree_perleaf_v(grads, kr, kx, silo, n_silos, sigma_c, b_scale):
+    return _mask_tree_perleaf(grads, kr, kx, silo, n_silos, sigma_c, b_scale)
+
+
+@kernel_variant(TREE, "pallas", priority=20,
+                doc="legacy name: packed engine, Pallas inner kernel")
+def _mask_tree_pallas(grads, kr, kx, silo, n_silos, sigma_c, b_scale):
+    return fused_ops.packed_mask_tree(grads, kr, kx, silo, n_silos, sigma_c,
+                                      b_scale, impl="pallas")
+
+
+@kernel_variant(TREE, "jnp", priority=10,
+                doc="legacy name: per-leaf jnp reference")
+def _mask_tree_jnp(grads, kr, kx, silo, n_silos, sigma_c, b_scale):
+    return _mask_tree_perleaf(grads, kr, kx, silo, n_silos, sigma_c, b_scale,
+                              impl="jnp")
+
+
+def pairwise_mask_tree(grads, key_r, key_xi, silo, n_silos: int, sigma_c,
+                       b_scale: float, impl: str = "auto"):
+    """Apply m_silo to every leaf of ``grads``.
+    silo may be a traced scalar (lax.axis_index); keys are per-step."""
+    return REGISTRY.dispatch(TREE, impl, fused_ops.tree_ctx(grads), grads,
+                             _raw(key_r), _raw(key_xi), silo, n_silos,
+                             sigma_c, b_scale)
 
 
 def pairwise_mask_only(shapes_tree, key_r, key_xi, silo, n_silos: int,

@@ -27,8 +27,10 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.configs.base import MeshConfig, PrivacyConfig, RunConfig
 from repro.core import barrier as barrier_mod
-from repro.core import clipping
+from repro.core import clipping, flatbuf
 from repro.core.noise_correction import NoiseState, init_state as init_noise_state
+from repro.kernels.dispatch import REGISTRY
+from repro.kernels.dp_clip import ops as clip_ops
 from repro.distributed.sharding_rules import (constrain as constrain_logical,
                                                params_pspecs, spec_for)
 
@@ -77,14 +79,25 @@ def _reshape_to_silos(batch: dict, n_silos: int) -> dict:
 
 def _fused_grads(model: Model, priv: PrivacyConfig, params, batch, n_silos,
                  keys, noise_state, clip_bound, clip_key):
-    """Per-silo clipped grads via vmap; aggregate noise post-reduce."""
+    """Per-silo clipped grads via vmap; aggregate noise post-reduce.
+
+    The whole post-grad pipeline runs on ONE packed flat buffer
+    (core/flatbuf): each silo's gradient pytree is packed inside the vmap —
+    the per-silo gradient stack is a single (n_silos, P) buffer instead of a
+    pytree of stacks — the scale-and-sum folds into one packed accumulate
+    kernel, the corrected DP noise is one fused dispatch on the (P,) sum,
+    and the tree is unpacked exactly once at the end."""
     silo_batches = _reshape_to_silos(batch, n_silos)
+    layout = flatbuf.layout_of(params)  # grads share the params treedef
 
     def per_silo(b):
         loss, g = jax.value_and_grad(model.loss)(params, b)
-        return loss, g, clipping.global_norm(g)
+        flat = flatbuf.pack(layout, g)
+        # norm off the packed buffer (padding is exactly zero): one reduce
+        # instead of a per-leaf sumsq chain
+        return loss, flat, jnp.sqrt(jnp.sum(flat * flat))
 
-    losses, gs, norms = jax.vmap(per_silo)(silo_batches)
+    losses, g_packed, norms = jax.vmap(per_silo)(silo_batches)  # (n_silos, P)
 
     if priv.enabled and priv.dynamic_clip:
         pcts = clipping.local_percentiles(norms)  # global view under pjit
@@ -92,18 +105,28 @@ def _fused_grads(model: Model, priv: PrivacyConfig, params, batch, n_silos,
             pcts[None], priv, clip_key)
 
     if priv.enabled:
-        scale = jnp.minimum(1.0, clip_bound / jnp.maximum(norms, 1e-12))
+        scale = clipping.clip_scale(norms, clip_bound)
     else:
         scale = jnp.ones_like(norms)
-    g_sum = jax.tree.map(
-        lambda g: jnp.tensordot(scale.astype(jnp.float32),
-                                g.astype(jnp.float32), axes=(0, 0)), gs)
+    g_sum = clip_ops.clipped_sum(g_packed, scale)  # (P,) fp32, one dispatch
 
     if priv.enabled:
-        noisy, new_ns = barrier_mod.fused_noise(g_sum, priv, keys, noise_state,
-                                                clip_bound)
+        # default packed, but honour force_impl / REPRO_KERNEL_IMPL on
+        # dp_noise_tree (an explicit perleaf/jnp override falls back to the
+        # legacy per-leaf jax.random noise on the unpacked tree)
+        variant = REGISTRY.resolve("dp_noise_tree", "packed",
+                                   {"n_leaves": layout.n_leaves}).name
+        if variant in ("perleaf", "jnp"):
+            g_tree = flatbuf.unpack(layout, g_sum, dtype=jnp.float32)
+            noisy, new_ns = barrier_mod.fused_noise(
+                g_tree, priv, keys, noise_state, clip_bound, impl=variant)
+            return noisy, jnp.mean(losses), norms, new_ns, clip_bound
+        noisy_packed, new_ns = barrier_mod.fused_noise_packed(
+            g_sum, priv, keys, noise_state, clip_bound,
+            impl="pallas" if variant == "pallas" else "auto")
     else:
-        noisy, new_ns = g_sum, noise_state
+        noisy_packed, new_ns = g_sum, noise_state
+    noisy = flatbuf.unpack(layout, noisy_packed, dtype=jnp.float32)
     return noisy, jnp.mean(losses), norms, new_ns, clip_bound
 
 
@@ -139,7 +162,7 @@ def _fused_grads_scan(model: Model, priv: PrivacyConfig, params, batch,
         acc, loss_acc = carry
         loss, g = jax.value_and_grad(model.loss)(params, b)
         norm = clipping.global_norm(g)
-        scale = jnp.minimum(1.0, clip_bound / jnp.maximum(norm, 1e-12)) \
+        scale = clipping.clip_scale(norm, clip_bound) \
             if priv.enabled else jnp.asarray(1.0, jnp.float32)
         acc = constrain_acc(jax.tree.map(
             lambda a, gg: a + scale * gg.astype(jnp.float32), acc, g))
@@ -156,8 +179,11 @@ def _fused_grads_scan(model: Model, priv: PrivacyConfig, params, batch,
         new_bound = clip_bound
 
     if priv.enabled:
+        # perleaf on purpose: the accumulator is fsdp-sharded and the packed
+        # engine would gather the full parameter buffer onto every device
+        # (REPRO_KERNEL_IMPL=dp_noise_tree=packed overrides if wanted)
         noisy, new_ns = barrier_mod.fused_noise(g_sum, priv, keys, noise_state,
-                                                clip_bound)
+                                                clip_bound, impl="perleaf")
     else:
         noisy, new_ns = g_sum, noise_state
     return noisy, loss_sum / n_silos, norms, new_ns, new_bound
@@ -189,12 +215,13 @@ def _barrier_grads(model: Model, priv: PrivacyConfig, mesh_cfg: MeshConfig,
             clip_bound = barrier_mod.dynamic_bound_from_percentiles(
                 all_pcts, priv, clip_key)
 
-        g, _ = clipping.clip_tree(g, clip_bound)
+        # clip folds into the fused packed clip+mask+noise dispatch
+        scale = clipping.clip_scale(norm, clip_bound)
         keys_t = barrier_mod.BarrierKeys(key_r, key_xi, clip_key)
         ns = NoiseState(prev_key=prev_key, has_prev=has_prev)
         agg, new_ns = barrier_mod.barrier_sync(
             g, idx, n_silos, priv, keys_t, ns, clip_bound,
-            axis_names=silo_axes)
+            axis_names=silo_axes, scale=scale)
         loss_mean = jax.lax.pmean(loss, silo_axes)
         return agg, loss_mean, norm[None], new_ns.prev_key, new_ns.has_prev, clip_bound
 

@@ -9,10 +9,17 @@ with :data:`repro.kernels.dispatch.REGISTRY`, so introspection
 from repro.kernels.dispatch import (REGISTRY, available_impls, force_impl,
                                     kernel_variant, on_tpu)
 from repro.kernels.dp_clip import ops as dp_clip_ops
+from repro.kernels.dp_fused import ops as dp_fused_ops
 from repro.kernels.flash_attention import ops as flash_attention_ops
 from repro.kernels.mamba2 import ops as mamba2_ops
 from repro.kernels.rwkv6 import ops as rwkv6_ops
 from repro.kernels.zsmask import ops as zsmask_ops
+
+# the packed-vs-perleaf tree-level kernels (zsmask_tree, dp_noise_tree)
+# register on import of their consumer modules; the sys.modules fallback
+# makes these safe under partial initialization when core is imported first
+import repro.core.masking  # noqa: E402,F401
+import repro.core.barrier  # noqa: E402,F401
 
 __all__ = [
     "REGISTRY",
@@ -21,6 +28,7 @@ __all__ = [
     "kernel_variant",
     "on_tpu",
     "dp_clip_ops",
+    "dp_fused_ops",
     "flash_attention_ops",
     "mamba2_ops",
     "rwkv6_ops",

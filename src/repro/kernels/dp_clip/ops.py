@@ -1,6 +1,12 @@
 """Public API for fused per-example clipping, routed through the
-kernel-dispatch registry (two kernels: ``dp_clip_sumsq`` and
-``dp_clip_accumulate``)."""
+kernel-dispatch registry.
+
+Tensor-level kernels (``dp_clip_sumsq``, ``dp_clip_accumulate``) operate on
+one (B, D) block; the tree-level kernel ``dp_clip_tree`` chooses between the
+packed flat-buffer engine (one fused ``dp_fused_clip_sum`` dispatch over the
+whole pytree — kernels/dp_fused) and the legacy per-leaf path (2 dispatches
+per leaf). ``auto`` prefers packed on TPU (where dispatch count dominates);
+override per kernel with ``REPRO_KERNEL_IMPL=dp_clip_tree=perleaf`` etc."""
 from __future__ import annotations
 
 import jax
@@ -9,12 +15,19 @@ import jax.numpy as jnp
 from repro.kernels.dispatch import kernel_variant, on_tpu, REGISTRY
 from repro.kernels.dp_clip import ref
 from repro.kernels.dp_clip.dp_clip import clip_accumulate, per_example_sumsq
+from repro.kernels.dp_fused import ops as fused_ops
 
 SUMSQ = "dp_clip_sumsq"
 ACCUM = "dp_clip_accumulate"
+TREE = "dp_clip_tree"
 
 
-@kernel_variant(SUMSQ, "pallas", priority=100,
+def _blockable(ctx) -> bool:
+    B, D = ctx["B"], ctx["D"]
+    return B % min(8, B) == 0 and D % min(512, D) == 0
+
+
+@kernel_variant(SUMSQ, "pallas", priority=100, predicate=_blockable,
                 auto_predicate=lambda ctx: ctx["on_tpu"],
                 doc="fused Pallas per-example sum-of-squares")
 def _sumsq_pallas(g):
@@ -26,7 +39,7 @@ def _sumsq_jnp(g):
     return ref.per_example_sumsq_ref(g)
 
 
-@kernel_variant(ACCUM, "pallas", priority=100,
+@kernel_variant(ACCUM, "pallas", priority=100, predicate=_blockable,
                 auto_predicate=lambda ctx: ctx["on_tpu"],
                 doc="fused Pallas clip-and-accumulate")
 def _accum_pallas(g, scale):
@@ -39,20 +52,25 @@ def _accum_jnp(g, scale):
 
 
 def sumsq(g, impl: str = "auto"):
-    return REGISTRY.dispatch(SUMSQ, impl, None, g)
+    return REGISTRY.dispatch(SUMSQ, impl,
+                             {"B": g.shape[0], "D": g.shape[1]}, g)
 
 
 def clipped_sum(g, scale, impl: str = "auto"):
-    return REGISTRY.dispatch(ACCUM, impl, None, g, scale)
+    """sum_b g[b] * scale[b] over a (B, D) block — also the packed silo
+    accumulate in distributed/steps.py (B = n_silos, D = P_padded)."""
+    return REGISTRY.dispatch(ACCUM, impl,
+                             {"B": g.shape[0], "D": g.shape[1]}, g, scale)
 
 
-def clip_and_sum_tree(grads_tree, clip_bound, impl: str = "auto"):
-    """Per-example clip over a pytree of (B, ...) per-example grads, returning
-    the clipped *sum* tree + the per-example norms (for diagnostics).
+# ---------------------------------------------------------------------------
+# Tree-level: packed flat-buffer engine vs legacy per-leaf dispatch
 
-    Global per-example norm combines per-leaf partial sumsq (tiny host-side
-    reduce), then each leaf is scaled and reduced over B.
-    """
+
+def _clip_and_sum_perleaf(grads_tree, clip_bound, impl: str = "auto"):
+    """Per-leaf path: 2 dispatches per pytree leaf. Global per-example norm
+    combines per-leaf partial sumsq, then each leaf is scaled and reduced
+    over B."""
     leaves = jax.tree.leaves(grads_tree)
     B = leaves[0].shape[0]
     flat = [g.reshape(B, -1) for g in leaves]
@@ -63,3 +81,35 @@ def clip_and_sum_tree(grads_tree, clip_bound, impl: str = "auto"):
         jax.tree.structure(grads_tree),
         [s.reshape(l.shape[1:]) for s, l in zip(summed, leaves)])
     return out, jnp.sqrt(total)
+
+
+@kernel_variant(TREE, "packed", priority=100,
+                auto_predicate=fused_ops.prefers_packed,
+                doc="packed flat-buffer engine: one fused dispatch per tree")
+def _tree_packed(grads_tree, clip_bound):
+    return fused_ops.packed_clip_and_sum(grads_tree, clip_bound)
+
+
+@kernel_variant(TREE, "perleaf", priority=50,
+                doc="per-leaf dispatch (2 kernels per leaf)")
+def _tree_perleaf(grads_tree, clip_bound):
+    return _clip_and_sum_perleaf(grads_tree, clip_bound)
+
+
+@kernel_variant(TREE, "pallas", priority=20,
+                doc="legacy name: packed engine, Pallas inner kernel")
+def _tree_pallas(grads_tree, clip_bound):
+    return fused_ops.packed_clip_and_sum(grads_tree, clip_bound, impl="pallas")
+
+
+@kernel_variant(TREE, "jnp", priority=10,
+                doc="legacy name: per-leaf jnp reference")
+def _tree_jnp(grads_tree, clip_bound):
+    return _clip_and_sum_perleaf(grads_tree, clip_bound, impl="jnp")
+
+
+def clip_and_sum_tree(grads_tree, clip_bound, impl: str = "auto"):
+    """Per-example clip over a pytree of (B, ...) per-example grads, returning
+    the clipped *sum* tree (fp32 leaves) + the per-example pre-clip norms."""
+    return REGISTRY.dispatch(TREE, impl, fused_ops.tree_ctx(grads_tree),
+                             grads_tree, clip_bound)

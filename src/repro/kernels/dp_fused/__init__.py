@@ -1,0 +1,4 @@
+"""Fused DP hot-path kernels over packed flat buffers (core/flatbuf.py):
+``dp_fused_clip_sum`` (per-example sumsq + clip scale + accumulate) and
+``dp_fused_clip_mask`` (clip + pairwise zero-sum mask + lambda-corrected
+noise regenerated in VMEM)."""

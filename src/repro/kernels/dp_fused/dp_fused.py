@@ -1,0 +1,196 @@
+"""Pallas TPU kernels for the packed flat-buffer DP hot path.
+
+Two kernel families over buffers produced by ``core/flatbuf.py``:
+
+* ``clip_sum_pallas``:  (B, P) -> ((P,), (B,))  one launch replacing the
+  per-leaf sumsq + accumulate pair. Grid is (2, nd, nb): phase 0 streams the
+  buffer accumulating per-example squared norms into a full-B VMEM scratch;
+  phase 1 streams it again computing the DP-SGD clip factor
+  min(1, C/||g_b||) on the fly and accumulating the clipped sum over
+  examples. The clipped per-example tensor (O(B*P)) never exists in HBM.
+
+* ``clip_mask_pallas``: (P,) -> (P,)  one launch fusing clip (externally
+  computed scale), the pairwise zero-sum mask, the fresh DP noise xi_t and
+  the lambda-corrected -lam*xi_{t-1} term. All four streams are regenerated
+  from 32-byte keys *inside VMEM* (threefry2x32 counters = global packed
+  indices), so masks and noise never touch HBM — one read + one write of the
+  gradient for the whole barrier.
+
+Scalars ride in SMEM. Counters are global element indices, so results are
+independent of the blocking and bit-identical to the jnp oracles in
+``ref.py`` for any block size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.zsmask.threefry import normal_pair
+
+
+def _block_b_for(B: int) -> int:
+    for cand in (8, 4, 2, 1):
+        if B % cand == 0:
+            return cand
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# clip_sum: per-example sumsq + scale + accumulate, one launch
+
+
+def _clip_sum_kernel(cb_ref, g_ref, sum_ref, norm_ref, ss_acc, d_acc, *,
+                     nd: int, nb: int, block_b: int):
+    p = pl.program_id(0)
+    d = pl.program_id(1)
+    b = pl.program_id(2)
+    rows = (pl.dslice(b * block_b, block_b), slice(None))
+
+    @pl.when(p == 0)
+    def _phase_sumsq():
+        g = g_ref[...].astype(jnp.float32)
+        part = jnp.sum(g * g, axis=1, keepdims=True)  # (block_b, 1)
+
+        @pl.when(d == 0)
+        def _init():
+            pl.store(ss_acc, rows, part)
+
+        @pl.when(d != 0)
+        def _accum():
+            pl.store(ss_acc, rows, pl.load(ss_acc, rows) + part)
+
+    @pl.when(p == 1)
+    def _phase_accumulate():
+        g = g_ref[...].astype(jnp.float32)
+        ss = pl.load(ss_acc, rows)                     # (block_b, 1)
+        norms = jnp.sqrt(jnp.maximum(ss, 1e-30))
+        scale = jnp.minimum(1.0, cb_ref[0] / norms)
+        part = jnp.sum(g * scale, axis=0, keepdims=True)  # (1, block_d)
+
+        @pl.when(b == 0)
+        def _init():
+            d_acc[...] = part
+
+        @pl.when(b != 0)
+        def _accum():
+            d_acc[...] += part
+
+        @pl.when(b == nb - 1)
+        def _flush_sum():
+            sum_ref[...] = d_acc[...]
+
+        @pl.when(d == nd - 1)
+        def _flush_norms():
+            norm_ref[...] = norms
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def clip_sum_pallas(g, clip_bound, block_d: int = 512, interpret: bool = True):
+    """g: (B, P) packed per-example grads; P % block_d == 0 (flatbuf pads
+    totals to ALIGN=1024). Returns (clipped_sum (P,), pre-clip norms (B,))."""
+    B, P = g.shape
+    block_d = min(block_d, P)
+    assert P % block_d == 0, (P, block_d)
+    block_b = _block_b_for(B)
+    nb, nd = B // block_b, P // block_d
+    cb = jnp.asarray(clip_bound, jnp.float32)[None]
+    sum_out, norm_out = pl.pallas_call(
+        functools.partial(_clip_sum_kernel, nd=nd, nb=nb, block_b=block_b),
+        grid=(2, nd, nb),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_b, block_d), lambda p, d, b: (b, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_d), lambda p, d, b: (0, d)),
+            pl.BlockSpec((block_b, 1), lambda p, d, b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, 1), jnp.float32),
+            pltpu.VMEM((1, block_d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cb, g)
+    return sum_out[0], norm_out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# clip_mask: clip + zero-sum mask + corrected noise, one launch
+
+
+def _clip_mask_kernel(ints_ref, flts_ref, g_ref, o_ref, *, block_d: int,
+                      use_pairwise: bool, use_prev: bool):
+    di = pl.program_id(0)
+    silo = ints_ref[0]
+    n = ints_ref[1]
+    key_r0, key_r1 = ints_ref[2].astype(jnp.uint32), ints_ref[3].astype(jnp.uint32)
+    key_x0, key_x1 = ints_ref[4].astype(jnp.uint32), ints_ref[5].astype(jnp.uint32)
+    key_p0, key_p1 = ints_ref[6].astype(jnp.uint32), ints_ref[7].astype(jnp.uint32)
+    scale = flts_ref[0]
+    s = flts_ref[1]       # sigma_c / sqrt(n)
+    b_scale = flts_ref[2]
+    lam_gate = flts_ref[3]
+
+    base = jnp.asarray(di * block_d).astype(jnp.uint32)
+    idx = base + jax.lax.broadcasted_iota(jnp.uint32, (1, block_d), 1)
+
+    def stream(k0, k1, sid):
+        z0, _ = normal_pair(k0, k1, idx,
+                            sid.astype(jnp.uint32) + jnp.zeros_like(idx))
+        return z0
+
+    out = g_ref[...].astype(jnp.float32) * scale
+    if use_pairwise:
+        nxt = jnp.where(silo + 1 == n, 0, silo + 1)
+        out = out + b_scale * (stream(key_r0, key_r1, silo)
+                               - stream(key_r0, key_r1, nxt))
+    out = out + s * stream(key_x0, key_x1, silo)
+    if use_prev:
+        out = out - lam_gate * (s * stream(key_p0, key_p1, silo))
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_silos", "use_pairwise", "use_prev", "block_d", "interpret"))
+def clip_mask_pallas(g, scale, key_r, key_xi, prev_key, silo, n_silos: int,
+                     sigma_c, b_scale, lam_gate, use_pairwise: bool = True,
+                     use_prev: bool = True, block_d: int = 1024,
+                     interpret: bool = True):
+    """g: packed (P,) buffer; key_*: (2,) uint32; silo traceable int32.
+    Returns fp32 ``g*scale + b*(r_i - r_next) + s*xi_t - lam_gate*s*xi_prev``."""
+    P = g.shape[0]
+    block_d = min(block_d, P)
+    assert P % block_d == 0, (P, block_d)
+    ints = jnp.stack([
+        jnp.asarray(silo, jnp.int32), jnp.asarray(n_silos, jnp.int32),
+        key_r[0].astype(jnp.int32), key_r[1].astype(jnp.int32),
+        key_xi[0].astype(jnp.int32), key_xi[1].astype(jnp.int32),
+        prev_key[0].astype(jnp.int32), prev_key[1].astype(jnp.int32)])
+    flts = jnp.stack([
+        jnp.asarray(scale, jnp.float32),
+        jnp.asarray(sigma_c, jnp.float32) / jnp.sqrt(float(n_silos)),
+        jnp.asarray(b_scale, jnp.float32),
+        jnp.asarray(lam_gate, jnp.float32)])
+
+    out = pl.pallas_call(
+        functools.partial(_clip_mask_kernel, block_d=block_d,
+                          use_pairwise=use_pairwise, use_prev=use_prev),
+        grid=(P // block_d,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block_d), lambda d: (0, d)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda d: (0, d)),
+        out_shape=jax.ShapeDtypeStruct((1, P), jnp.float32),
+        interpret=interpret,
+    )(ints, flts, g[None])
+    return out[0]

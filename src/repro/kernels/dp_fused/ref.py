@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the fused packed-buffer DP kernels.
+
+The mask/noise streams use the same threefry2x32 counter construction as
+``kernels/zsmask`` — counters are *global packed-buffer indices* (one stream
+per silo id), so the jnp oracle and the Pallas kernel are bit-identical for
+any blocking, and every consumer of the packed engine (pairwise masking,
+barrier sync, corrected fused noise) draws from one consistent stream family.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.zsmask.threefry import normal_pair
+
+
+def _stream(key, idx, stream_id):
+    """Standard normal per counter; the stream id (silo) is the counter's
+    second word — identical to the zsmask construction."""
+    z0, _ = normal_pair(key[0], key[1], idx,
+                        jnp.asarray(stream_id, jnp.uint32) + jnp.zeros_like(idx))
+    return z0
+
+
+def clip_sum_ref(g, clip_bound):
+    """g: (B, P) packed per-example grads. Returns (clipped_sum (P,) fp32,
+    per-example pre-clip norms (B,) fp32) — DP-SGD clip factor
+    min(1, C/||g_b||) folded into the sum over examples."""
+    g32 = g.astype(jnp.float32)
+    sumsq = jnp.sum(g32 * g32, axis=1)
+    norms = jnp.sqrt(jnp.maximum(sumsq, 1e-30))
+    scale = jnp.minimum(1.0, jnp.asarray(clip_bound, jnp.float32) / norms)
+    return jnp.tensordot(scale, g32, axes=(0, 0)), norms
+
+
+def clip_mask_ref(g, scale, key_r, key_xi, prev_key, silo, n_silos, sigma_c,
+                  b_scale, lam_gate, use_pairwise: bool = True,
+                  use_prev: bool = True):
+    """g: packed (P,) buffer. Returns fp32
+    ``g*scale + b*(r_i - r_next) + s*xi_t - lam_gate*s*xi_prev`` with
+    s = sigma_c/sqrt(n); the pairwise r-terms telescope across silos and the
+    xi streams sum to N(0, sigma_c^2 I)."""
+    P = g.shape[0]
+    idx = jnp.arange(P, dtype=jnp.uint32)
+    s = jnp.asarray(sigma_c, jnp.float32) / jnp.sqrt(float(n_silos))
+    out = g.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+    if use_pairwise:
+        nxt = (silo + 1) % n_silos
+        r_i = _stream(key_r, idx, silo)
+        r_next = _stream(key_r, idx, nxt)
+        out = out + jnp.asarray(b_scale, jnp.float32) * (r_i - r_next)
+    out = out + s * _stream(key_xi, idx, silo)
+    if use_prev:
+        xp = _stream(prev_key, idx, silo)
+        out = out - jnp.asarray(lam_gate, jnp.float32) * (s * xp)
+    return out

@@ -29,8 +29,27 @@ class StragglerPolicy:
     _strikes: int = 0
     events: list = field(default_factory=list)
 
-    def observe(self, step_time_s: float) -> bool:
-        """Returns True if this step was flagged as straggling."""
+    @property
+    def calibrated(self) -> bool:
+        return self._ema is not None
+
+    def calibrate(self, step_time_s: float) -> None:
+        """Re-anchor the adaptive baseline from an authoritative measurement
+        (e.g. the amortized per-step wall time over a metrics-flush window)
+        without flagging. Used by the trainer's async loop, where per-step
+        dispatch times are only meaningful for *detecting* stalls (dispatch
+        blocks under back-pressure) but would mis-seed the EMA."""
+        self._ema = step_time_s if self._ema is None \
+            else 0.5 * self._ema + 0.5 * step_time_s
+
+    def observe(self, step_time_s: float, update_baseline: bool = True) -> bool:
+        """Returns True if this step was flagged as straggling.
+
+        ``update_baseline=False`` checks against the deadline without folding
+        the sample into the adaptive EMA — for callers whose samples are only
+        trustworthy as stall detectors (async dispatch times collapse to ~0
+        right after a queue drain and would decay the baseline; such callers
+        anchor the EMA via :meth:`calibrate` instead)."""
         if self._ema is None:
             self._ema = step_time_s
         limit = self.deadline_s if self.deadline_s is not None \
@@ -48,5 +67,6 @@ class StragglerPolicy:
                 self._strikes = 0
         else:
             self._strikes = 0
-            self._ema = 0.9 * self._ema + 0.1 * step_time_s
+            if update_baseline:
+                self._ema = 0.9 * self._ema + 0.1 * step_time_s
         return flagged

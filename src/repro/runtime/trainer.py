@@ -33,7 +33,12 @@ class TrainerConfig:
     # privacy budget stop: halt when epsilon(delta) exceeds this (the paper's
     # "no further training is allowed by DP" semantics, Fig. 6)
     epsilon_budget: Optional[float] = None
-    step_deadline_s: Optional[float] = None  # straggler deadline
+    # straggler deadline. When set, every step blocks on the device result so
+    # the deadline compares against true step time; when None (adaptive EMA),
+    # steps stay fully async and the policy observes the amortized per-step
+    # wall time at each metrics flush instead
+    step_deadline_s: Optional[float] = None
+    metrics_flush_every: int = 50  # bound on how long metrics stay on-device
 
 
 @dataclass
@@ -46,6 +51,8 @@ class Trainer:
     mesh: Optional[object] = None
     metrics_log: list = field(default_factory=list)
     _preempted: bool = False
+    _pending: list = field(default_factory=list)  # on-device metric entries
+    _window_t0: Optional[float] = None  # flush-window start (adaptive mode)
 
     def __post_init__(self):
         priv = self.run_cfg.privacy
@@ -64,8 +71,34 @@ class Trainer:
             self._preempted = True
         signal.signal(signal.SIGTERM, handler)
 
+    # -- metrics -----------------------------------------------------------
+    def _flush_metrics(self):
+        """Convert pending on-device metric entries to host floats in one
+        transfer. Keeping per-step metrics on-device avoids a device sync
+        every step (the jitted step stays fully async between boundaries).
+        In adaptive straggler mode this is also where the policy observes
+        time: the transfer drains the dispatch queue, so window wall time /
+        window steps is the honest per-step time."""
+        if not self._pending:
+            return
+        n = len(self._pending)
+        host = jax.device_get(self._pending)
+        self._pending.clear()
+        for entry in host:
+            self.metrics_log.append({
+                k: float(v) if isinstance(v, (np.ndarray, np.floating))
+                else v
+                for k, v in entry.items()})
+        if self.tcfg.step_deadline_s is None and self._window_t0 is not None:
+            # authoritative amortized step time for this window re-anchors
+            # the adaptive EMA; per-step dispatch dts (observed once
+            # calibrated) then catch individual stalls via back-pressure
+            self.straggler.calibrate((time.time() - self._window_t0) / n)
+        self._window_t0 = time.time()
+
     # -- checkpointing -----------------------------------------------------
     def _save(self, state, step: int):
+        self._flush_metrics()
         if not self.tcfg.checkpoint_dir:
             return
         extra = {
@@ -109,23 +142,40 @@ class Trainer:
                 break  # privacy budget exhausted: DP forbids further training
 
             batch = self.next_batch()
+            if self._window_t0 is None:
+                self._window_t0 = time.time()
             t0 = time.time()
             state, metrics = self._jit_step(state, batch, root_key)
-            metrics = {k: float(v) for k, v in metrics.items()}
+            if self.tcfg.step_deadline_s is not None:
+                # a hard deadline needs true step time -> block per step
+                jax.block_until_ready(metrics)
             dt = time.time() - t0
-            self.straggler.observe(dt)
+            if self.tcfg.step_deadline_s is not None:
+                self.straggler.observe(dt)
+            elif self.straggler.calibrated:
+                # async mode: metrics stay on-device (no per-step host sync).
+                # Dispatch wall time still surfaces device stalls (dispatch
+                # blocks once the queue backs up), so use it for *flagging*
+                # only — the EMA baseline is anchored exclusively by
+                # calibrate() at flush boundaries, or the near-zero
+                # post-drain dts would decay it into spurious flags
+                self.straggler.observe(dt, update_baseline=False)
+            entry = {"step": step, **metrics, "step_time_s": dt}
             if self.accountant:
                 self.accountant.step()
-                metrics["epsilon"] = self.accountant.epsilon()
-            metrics["step_time_s"] = dt
-            self.metrics_log.append({"step": step, **metrics})
+                entry["epsilon"] = self.accountant.epsilon()
+            self._pending.append(entry)
             step += 1
+            if len(self._pending) >= max(self.tcfg.metrics_flush_every, 1):
+                self._flush_metrics()
             if step % self.tcfg.checkpoint_every == 0:
                 self._save(state, step)
             if self.tcfg.log_every and step % self.tcfg.log_every == 0:
-                eps = metrics.get("epsilon")
-                print(f"step {step:6d} loss {metrics['loss']:.4f} "
-                      f"C {metrics['clip_bound']:.3f}"
+                self._flush_metrics()
+                last = self.metrics_log[-1]
+                eps = last.get("epsilon")
+                print(f"step {step:6d} loss {last['loss']:.4f} "
+                      f"C {last['clip_bound']:.3f}"
                       + (f" eps {eps:.3f}" if eps is not None else ""),
                       flush=True)
         self._save(state, step)

@@ -132,10 +132,15 @@ def test_dispatch_calls_selected_fn():
 EXPECTED_IMPLS = {
     "dp_clip_sumsq": {"pallas", "jnp"},
     "dp_clip_accumulate": {"pallas", "jnp"},
+    "dp_clip_tree": {"packed", "perleaf", "pallas", "jnp"},
+    "dp_fused_clip_sum": {"pallas", "jnp"},
+    "dp_fused_clip_mask": {"pallas", "jnp"},
+    "dp_noise_tree": {"packed", "perleaf", "pallas", "jnp"},
     "flash_attention": {"pallas", "blocked", "blocked_naive", "jnp"},
     "mamba2_ssd": {"pallas", "jnp", "sequential"},
     "rwkv6_wkv": {"pallas", "jnp", "masked", "sequential"},
     "zsmask": {"pallas", "jnp"},
+    "zsmask_tree": {"packed", "perleaf", "pallas", "jnp"},
 }
 
 
