@@ -153,6 +153,29 @@ def run():
              timeit(jax.jit(pipeline_packed), tree), impl="packed",
              shape=shape)
 
+        # elastic path: the same engine run with a per-step participation set
+        # (active-ring masks, per-stream sqrt(k) renormalization, active-set
+        # divisor) vs the static all-active run above — tracks the overhead
+        # of elastic silo membership on the hot path
+        from repro.core.dp_pipeline import DPPipeline
+
+        n_silos = B
+        silo_layout = flatbuf.layout_of({k: v[0] for k, v in tree.items()})
+        pipe = DPPipeline(priv, silo_layout, n_silos)
+        active_drop = jnp.ones((n_silos,), jnp.bool_).at[1].set(False)
+
+        def pipeline_active(t, active):
+            stacked = jax.vmap(
+                lambda tt: flatbuf.pack(silo_layout, tt))(t)  # (B, P)
+            noisy, _, _ = pipe.run_central(
+                stacked, pipe.norms(stacked), keys, nstate, 1.0,
+                keys.key_clip, active)
+            return noisy
+
+        emit(f"kernels/dp_pipeline_active_set_l{n_leaves}",
+             timeit(jax.jit(pipeline_active), tree, active_drop),
+             impl="packed", shape=shape + f",k={n_silos - 1}/{n_silos}")
+
 
 if __name__ == "__main__":
     run()

@@ -116,22 +116,34 @@ class Session:
                 epsilon_budget: Optional[float] = None,
                 step_deadline_s: Optional[float] = None,
                 next_batch: Optional[Callable[[], dict]] = None,
-                batch_size: int = 8, seq_len: int = 128) -> Trainer:
-        """A wired Trainer; ``next_batch`` defaults to a synthetic LM stream."""
+                batch_size: int = 8, seq_len: int = 128,
+                elastic: bool = False,
+                silo_schedule: Optional[Callable[[int], Any]] = None) -> Trainer:
+        """A wired Trainer; ``next_batch`` defaults to a synthetic LM stream.
+
+        ``elastic=True`` threads a per-step silo participation set through
+        the jitted step (straggler escalations drop a silo for a cooldown
+        window; the DP engine keeps the zero-sum-mask and noise-correction
+        invariants over any active subset). ``silo_schedule`` pins the
+        participation set deterministically: step -> bool sequence."""
         tcfg = TrainerConfig(total_steps=total_steps,
                              checkpoint_every=checkpoint_every,
                              checkpoint_dir=checkpoint_dir,
                              log_every=log_every,
                              epsilon_budget=epsilon_budget,
-                             step_deadline_s=step_deadline_s)
+                             step_deadline_s=step_deadline_s,
+                             elastic=elastic or silo_schedule is not None)
         next_batch = next_batch or self.synthetic_batches(batch_size, seq_len)
-        return Trainer(self.model, self.run_cfg, tcfg, next_batch)
+        return Trainer(self.model, self.run_cfg, tcfg, next_batch,
+                       silo_schedule=silo_schedule)
 
     def train(self, *, steps: int = 50, batch_size: int = 8, seq_len: int = 128,
               next_batch: Optional[Callable[[], dict]] = None,
               checkpoint_dir: Optional[str] = None, checkpoint_every: int = 25,
               log_every: int = 10, epsilon_budget: Optional[float] = None,
               step_deadline_s: Optional[float] = None,
+              elastic: bool = False,
+              silo_schedule: Optional[Callable[[int], Any]] = None,
               state=None) -> TrainResult:
         """Run (or resume) training through the fault-tolerant Trainer loop."""
         trainer = self.trainer(total_steps=steps, checkpoint_dir=checkpoint_dir,
@@ -139,7 +151,8 @@ class Session:
                                log_every=log_every, epsilon_budget=epsilon_budget,
                                step_deadline_s=step_deadline_s,
                                next_batch=next_batch, batch_size=batch_size,
-                               seq_len=seq_len)
+                               seq_len=seq_len, elastic=elastic,
+                               silo_schedule=silo_schedule)
         state = state if state is not None else self.init_state()
         state, step = trainer.fit(state, jax.random.PRNGKey(self.seed + 1))
         return TrainResult(state=state, step=step,
@@ -225,7 +238,16 @@ class CollaborativeSession:
     per-owner channel keys through the KDS, and connect the model updater —
     so examples drive the training loop with one ``step()`` call per round.
     The updater only ever sees masked updates; the accountant composes the
-    (eps, delta) budget over every round.
+    (eps, delta) budget over every round and records per-round contribution
+    counts.
+
+    Membership is elastic: ``drop_silo``/``rejoin_silo`` change who
+    contributes from the next round on. The admin distributes the round's
+    participation set with the step keys, each active handler builds its
+    zero-sum mask over the ring of *active* silos (dp_pipeline engine — the
+    masks still telescope to zero and the aggregate noise std stays exactly
+    sigma*C for any active count), and the updater divides by the actual
+    contributors.
     """
 
     service: Any
@@ -236,6 +258,7 @@ class CollaborativeSession:
     accountant: Any
     n_silos: int
     clip_bound: float = 1.0
+    membership: Any = None
 
     @classmethod
     def from_silos(cls, silo_data: list, privacy: PrivacyConfig, *,
@@ -262,28 +285,55 @@ class CollaborativeSession:
         for h in handlers:
             updater.channels[h.name] = SecureChannel(
                 svc.kds._records[f"dk-{h.silo_idx}"].key, h.name)
-        admin = Admin("admin", svc, root_key=jax.random.PRNGKey(root_seed))
+        from repro.runtime.elastic import SiloMembership
+
+        admin = Admin("admin", svc, root_key=jax.random.PRNGKey(root_seed),
+                      n_silos=len(silo_data))
         accountant = PrivacyAccountant(sigma=privacy.sigma, delta=privacy.delta)
+        admin.accountant = accountant
         return cls(service=svc, privacy=privacy, handlers=handlers,
                    updater=updater, admin=admin, accountant=accountant,
-                   n_silos=len(silo_data), clip_bound=privacy.clip_bound)
+                   n_silos=len(silo_data), clip_bound=privacy.clip_bound,
+                   membership=SiloMembership(len(silo_data)))
+
+    def drop_silo(self, silo: int, step: Optional[int] = None,
+                  cooldown: Optional[int] = None) -> bool:
+        """Remove a dataset owner from the next rounds (returns False when
+        the quorum would be broken). ``step`` defaults to the next round, so
+        a mid-session cooldown counts from now rather than from round 0."""
+        step = self._next_round if step is None else step
+        return self.membership.drop(silo, step, cooldown)
+
+    def rejoin_silo(self, silo: int, step: Optional[int] = None) -> None:
+        self.membership.rejoin(
+            silo, step=self._next_round if step is None else step)
+
+    @property
+    def _next_round(self) -> int:
+        return self.accountant.steps
 
     def step(self, step_idx: int, params, grad_fn: Callable,
              update_fn: Callable, lr: float):
-        """One round: admin keys -> silo updates (clip + zero-sum DP mask,
-        model-owner code sandboxed) -> updater aggregate. Returns
-        (new_params, mean_loss)."""
+        """One round: admin keys + participation set + correction state ->
+        active silo updates (clip + zero-sum DP mask over the active ring,
+        model-owner code sandboxed) -> updater aggregate over the actual
+        contributors -> admin advances the correction state and records the
+        contribution count. Returns (new_params, mean_loss)."""
         from repro.core.tee.components import _ser
 
         keys = self.admin.keys_for_step(step_idx)
+        active = self.membership.active_at(step_idx)
+        noise_state = self.admin.state_for_step()
         blob = _ser(params)
         updates = {h.name: h.compute_update(blob, grad_fn, self.privacy, keys,
                                             self.n_silos,
-                                            clip_bound=self.clip_bound)
-                   for h in self.handlers}
+                                            clip_bound=self.clip_bound,
+                                            active=active,
+                                            noise_state=noise_state)
+                   for h in self.handlers if active[h.silo_idx]}
         params, loss = self.updater.aggregate(updates, params, update_fn,
-                                              lr=lr, n_silos=self.n_silos)
-        self.accountant.step()
+                                              lr=lr)
+        self.admin.advance(keys, active)  # accountant records contributions
         return params, loss
 
     def epsilon(self) -> float:

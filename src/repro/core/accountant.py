@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from typing import Optional
 
 
 def _phi(x: float) -> float:
@@ -172,10 +173,17 @@ class PrivacyAccountant:
     q: float = 1.0  # sampling rate; 1.0 = full batch
     mode: str = "analytic"
     steps: int = 0
+    # per-step active-silo counts (elastic membership). Composition is
+    # per-contribution (sensitivity C per silo regardless of how many
+    # contributed), so the counts don't change epsilon — they are the audit
+    # record per-silo accounting builds on (ROADMAP open item)
+    contributions: list = field(default_factory=list)
     _rdp: dict = field(default_factory=dict)
 
-    def step(self, n: int = 1) -> None:
+    def step(self, n: int = 1, contributions: Optional[int] = None) -> None:
         self.steps += n
+        if contributions is not None:
+            self.contributions.extend([int(contributions)] * n)
         if self.mode == "rdp":
             sig = self.sigma * (1.0 - self.lam)
             for a in range(2, 256):
@@ -196,11 +204,13 @@ class PrivacyAccountant:
     def state_dict(self) -> dict:
         return {"sigma": self.sigma, "delta": self.delta, "lam": self.lam,
                 "q": self.q, "mode": self.mode, "steps": self.steps,
+                "contributions": list(self.contributions),
                 "rdp": dict(self._rdp)}
 
     @classmethod
     def from_state_dict(cls, d: dict) -> "PrivacyAccountant":
         acc = cls(sigma=d["sigma"], delta=d["delta"], lam=d["lam"], q=d["q"],
-                  mode=d["mode"], steps=d["steps"])
+                  mode=d["mode"], steps=d["steps"],
+                  contributions=[int(c) for c in d.get("contributions", [])])
         acc._rdp = {int(k): v for k, v in d["rdp"].items()}
         return acc

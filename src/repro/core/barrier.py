@@ -1,23 +1,22 @@
-"""The privacy barrier (paper §4): composition of clipping, zero-sum masking
-and corrected DP noise around the gradient synchronization step.
+"""The privacy barrier (paper §4): keys, dynamic-bound protocol and the
+tree-level corrected-noise kernel library.
 
-Two numerically-equivalent paths (DESIGN.md §2), both exposed to the step
-builders in distributed/steps.py, and both now running on the packed
-flat-buffer engine (core/flatbuf + kernels/dp_fused):
+The per-tier composition of clipping, zero-sum masking and corrected DP
+noise lives in ONE place now — :class:`repro.core.dp_pipeline.DPPipeline`
+(stage graph ``norms -> dynamic_bound -> clip_scale -> masked_aggregate ->
+corrected_noise`` with an explicit participation set). This module keeps the
+pieces the engine and its callers share:
 
-* ``barrier_sync``  — paper-faithful: runs *inside* shard_map manual over the
-  silo axes. The whole clip -> zero-sum mask -> lambda-corrected noise
-  pipeline is ONE fused dispatch over the silo's packed gradient buffer
-  (``dp_fused_clip_mask``), and the explicit psum runs on the packed buffer
-  (one collective instead of one per pytree leaf). The masked per-silo
-  gradients exist on the wire exactly as in the paper.
-* ``fused_noise``   — beyond-paper: per-silo clipping via vmap under pjit,
-  masks elided (they cancel in the aggregate), corrected DP noise injected
-  once post-reduce. The tree-level kernel ``dp_noise_tree`` picks between the
-  packed engine (noise regenerated in VMEM from 32-byte keys) and the legacy
-  per-leaf jax.random path — the per-leaf variant stays load-bearing for the
-  FSDP-sharded scan accumulator, where packing would gather the full
-  parameter buffer onto every device.
+* ``BarrierKeys`` / ``step_keys`` — the admin's 32-bytes-per-step key fanout.
+* ``dynamic_bound_from_percentiles`` — the §4.3 percentile-bound selection.
+* the ``dp_noise_tree`` registry kernel (``fused_noise`` /
+  ``fused_noise_packed``): post-aggregate corrected noise as a standalone
+  tree-level op. The packed variant regenerates noise in VMEM from 32-byte
+  keys; the per-leaf variant stays load-bearing for FSDP-sharded
+  accumulators, where packing would gather the full parameter buffer onto
+  every device.
+* ``aggregate_noise_from_streams`` — test oracle for the engine's per-silo
+  stream construction.
 """
 from __future__ import annotations
 
@@ -91,65 +90,7 @@ def dynamic_bound_from_percentiles(percentiles_all, priv: PrivacyConfig, key):
 
 
 # ---------------------------------------------------------------------------
-# Barrier path (inside shard_map over the silo axes)
-
-
-def barrier_sync(g, silo, n_silos: int, priv: PrivacyConfig, keys: BarrierKeys,
-                 noise_state: NoiseState, clip_bound, axis_names=("pod", "data"),
-                 scale=None):
-    """Per-silo: clip (when ``scale`` is given) + mask + lambda correction in
-    one fused dispatch over the packed buffer; all: one psum of the packed
-    buffer over the silo axes. Returns the aggregate
-    (sum_i scale_i*g_i + sigma*C*(xi_t - lam*xi_{t-1})) and the new state."""
-    sigma_c = priv.sigma * clip_bound
-    scale_ = jnp.asarray(1.0 if scale is None else scale, jnp.float32)
-
-    def scaled(tree):
-        return jax.tree.map(
-            lambda x: (x.astype(jnp.float32) * scale_).astype(x.dtype), tree)
-
-    if priv.mask_mode == "pairwise":
-        # packed by default; an explicit force_impl / REPRO_KERNEL_IMPL
-        # override of zsmask_tree to perleaf/jnp falls back to the legacy
-        # per-leaf construction (different — equally valid — stream family;
-        # note aggregate_noise_from_streams models the packed construction)
-        variant = REGISTRY.resolve(masking.TREE, "packed",
-                                   fused_ops.tree_ctx(g)).name
-        if variant in ("perleaf", "jnp"):
-            clipped = scaled(g)
-            masked = masking.pairwise_mask_tree(
-                clipped, keys.key_r, keys.key_xi, silo, n_silos,
-                sigma_c, priv.mask_scale * sigma_c, impl=variant)
-            if priv.noise_lambda > 0.0:
-                prev = masking.pairwise_mask_only(
-                    g, keys.key_r, noise_state.prev_key, silo, n_silos,
-                    sigma_c, 0.0, impl=variant)
-                gate = jnp.where(noise_state.has_prev, priv.noise_lambda, 0.0)
-                masked = jax.tree.map(
-                    lambda m, p: m - gate * p.astype(m.dtype), masked, prev)
-            agg = jax.lax.psum(masked, axis_names)
-        else:
-            layout = flatbuf.layout_of(g)
-            packed = flatbuf.pack(layout, g)
-            lam_gate = jnp.where(noise_state.has_prev, priv.noise_lambda, 0.0)
-            masked = fused_ops.clip_mask_packed(
-                packed, scale_, masking._raw(keys.key_r),
-                masking._raw(keys.key_xi), noise_state.prev_key, silo,
-                n_silos, sigma_c, priv.mask_scale * sigma_c, lam_gate,
-                use_pairwise=True, use_prev=priv.noise_lambda > 0.0,
-                impl="pallas" if variant == "pallas" else "auto")
-            agg = flatbuf.unpack(layout, jax.lax.psum(masked, axis_names))
-    elif priv.mask_mode == "none":
-        agg = jax.lax.psum(scaled(g), axis_names)
-    else:
-        raise ValueError(f"barrier path supports pairwise|none, got {priv.mask_mode}")
-    new_state = NoiseState(prev_key=masking._raw(keys.key_xi),
-                           has_prev=jnp.ones((), jnp.bool_))
-    return agg, new_state
-
-
-# ---------------------------------------------------------------------------
-# Fused path (post-reduce aggregate noise under pjit)
+# Post-aggregate corrected noise (the dp_noise_tree registry kernel)
 
 NOISE = "dp_noise_tree"
 

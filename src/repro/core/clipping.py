@@ -8,7 +8,7 @@ adaptation for 100B-scale archs (DESIGN.md §5).
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -73,8 +73,25 @@ def per_microbatch_clipped_grad(loss_fn: Callable, params, batch, clip_bound,
 PERCENTILES = (0.1, 0.25, 0.5, 0.75, 0.9)
 
 
-def local_percentiles(norms: jax.Array, percentiles=PERCENTILES) -> jax.Array:
-    """Silo-side: the norms matching the agreed percentiles (sent to admin)."""
+def masked_quantile(x: jax.Array, qs, mask: jax.Array) -> jax.Array:
+    """``jnp.quantile`` (linear interpolation) restricted to ``mask``-selected
+    entries; the mask may be traced (elastic participation sets). Inactive
+    entries sort to +inf and never influence the result."""
+    xs = jnp.sort(jnp.where(mask, x.astype(jnp.float32), jnp.inf))
+    k = jnp.maximum(jnp.sum(mask.astype(jnp.int32)), 1)
+    pos = jnp.asarray(qs, jnp.float32) * (k - 1).astype(jnp.float32)
+    lo = jnp.floor(pos).astype(jnp.int32)
+    hi = jnp.ceil(pos).astype(jnp.int32)
+    frac = pos - lo.astype(jnp.float32)
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+def local_percentiles(norms: jax.Array, percentiles=PERCENTILES,
+                      mask: Optional[jax.Array] = None) -> jax.Array:
+    """Silo-side: the norms matching the agreed percentiles (sent to admin).
+    ``mask`` restricts the summary to the active silos' norms."""
+    if mask is not None:
+        return masked_quantile(norms, jnp.asarray(percentiles), mask)
     return jnp.quantile(norms.astype(jnp.float32), jnp.asarray(percentiles))
 
 

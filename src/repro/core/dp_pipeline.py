@@ -1,0 +1,333 @@
+"""The single DP-aggregation engine behind every execution tier.
+
+CITADEL++'s core guarantee — the model updater only ever sees
+
+    sum_i clip(g_i) + sigma*C*(xi_t - lambda*xi_{t-1})
+
+— used to be implemented once per execution tier (vmap-fused, silo-serial
+scan, shard_map barrier, and the TEE wire protocol), each copy re-deciding
+packed-vs-perleaf and re-deriving streams. :class:`DPPipeline` is the one
+engine all four tiers now build on. It is constructed once per step function
+from a :class:`~repro.configs.base.PrivacyConfig` + a
+:class:`~repro.core.flatbuf.PackedLayout` and exposes the stage graph
+
+    norms -> dynamic_bound -> clip_scale -> masked_aggregate -> corrected_noise
+
+with two cross-cutting decisions made exactly once:
+
+* **Execution policy** (``packed`` | ``perleaf``, inner kernel impl): resolved
+  through the kernel-dispatch REGISTRY at construction (honouring
+  ``force_impl`` / ``REPRO_KERNEL_IMPL`` on ``dp_noise_tree``). One policy
+  governs both the mask and the noise construction — all silos of a session
+  must draw from the same stream family, so the old per-stage resolution was
+  a correctness hazard, not a feature.
+* **Participation set**: every stage takes ``active``, an ``(n_silos,)`` bool
+  mask of the silos actually contributing this step. Zero-sum masks are
+  generated over the ring of *active* silos (``next_active`` skips dropped
+  members, so the r-terms still telescope to zero for any k <= n), each
+  active silo's fresh-noise share is ``sigma_c/sqrt(k)`` (aggregate noise std
+  stays exactly ``sigma_c`` for any k), and the aggregate is divided by the
+  actual contribution count — elastic membership without touching the
+  guarantee.
+
+Noise-correction under elasticity: the lambda-corrected term
+``-lam*xi_{t-1}`` is carried *per silo*. :class:`NoiseState` remembers the
+previous step's participation set; at step t, silo i subtracts its own share
+of xi_{t-1} (std ``sigma_c/sqrt(k_{t-1})``) only if it contributed at t-1 and
+is active now. A silo that drops out takes its correction share with it: the
+uncorrected remainder of xi_{t-1} simply persists in the model. That only
+*adds* residual noise, so the accountant's epsilon (computed for the fully
+corrected mechanism) remains a valid upper bound.
+
+Tier placement stays in the callers: ``distributed/steps.py`` wraps these
+stages in vmap / scan / shard_map, ``core/tee/components.py`` invokes them
+per protocol message. Neither re-implements any of the math.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PrivacyConfig
+from repro.core import clipping, flatbuf, masking, noise_correction
+from repro.core.barrier import BarrierKeys, dynamic_bound_from_percentiles
+from repro.core.flatbuf import PackedLayout
+from repro.core.noise_correction import NoiseState
+from repro.kernels.dispatch import REGISTRY
+from repro.kernels.dp_clip import ops as clip_ops
+from repro.kernels.dp_fused import ops as fused_ops
+
+NOISE_TREE = "dp_noise_tree"
+
+
+@dataclass(frozen=True)
+class ExecutionPolicy:
+    """How the pipeline executes: ``packed`` runs every stage on the flat
+    buffer through the fused kernels (``inner`` picks pallas/jnp/auto for the
+    tensor-level dispatch); ``perleaf`` keeps the legacy per-leaf jax.random
+    construction (load-bearing for FSDP-sharded accumulators, where packing
+    would gather the full parameter buffer onto every device)."""
+
+    mode: str   # 'packed' | 'perleaf'
+    inner: str  # tensor-kernel impl under packed: 'auto' | 'pallas' | 'jnp'
+
+
+def resolve_policy(request: str, n_leaves: int) -> ExecutionPolicy:
+    """Resolve the execution policy through the registry — exactly once per
+    pipeline. ``force_impl(...)`` / ``REPRO_KERNEL_IMPL=dp_noise_tree=...``
+    override ``request`` as usual; legacy impl names map onto the two modes
+    (pallas -> packed/pallas, jnp -> perleaf)."""
+    name = REGISTRY.resolve(NOISE_TREE, request, {"n_leaves": n_leaves}).name
+    if name in ("perleaf", "jnp"):
+        return ExecutionPolicy("perleaf", "jnp")
+    return ExecutionPolicy("packed", "pallas" if name == "pallas" else "auto")
+
+
+class DPPipeline:
+    """One guarded aggregation engine, four mesh placements (DESIGN.md §2)."""
+
+    def __init__(self, priv: PrivacyConfig, layout: PackedLayout,
+                 n_silos: int, policy: str = "packed"):
+        if priv.mask_mode not in ("pairwise", "none"):
+            raise ValueError(
+                f"DPPipeline supports mask_mode pairwise|none, got "
+                f"{priv.mask_mode!r} (admin masks stay a library-only "
+                f"baseline in core/masking.py)")
+        self.priv = priv
+        self.layout = layout
+        self.n_silos = int(n_silos)
+        self.policy = resolve_policy(policy, layout.n_leaves)
+
+    # -- participation set --------------------------------------------------
+    def full_active(self) -> jax.Array:
+        return jnp.ones((self.n_silos,), jnp.bool_)
+
+    def active_count(self, active) -> jax.Array:
+        """Number of contributing silos (>=1), the aggregate's divisor."""
+        return jnp.maximum(jnp.sum(active.astype(jnp.float32)), 1.0)
+
+    def next_active(self, silo, active) -> jax.Array:
+        """The next *active* silo after ``silo`` in the ring — the pairwise
+        mask neighbour. Skipping dropped members keeps the r-terms
+        telescoping to zero over any participation set."""
+        offs = jnp.arange(1, self.n_silos + 1, dtype=jnp.int32)
+        cand = (jnp.asarray(silo, jnp.int32) + offs) % self.n_silos
+        return cand[jnp.argmax(active[cand])]
+
+    def prev_active(self, state: NoiseState) -> jax.Array:
+        pa = getattr(state, "prev_active", None)
+        if pa is None or pa.shape != (self.n_silos,):
+            return self.full_active()  # legacy state: all silos contributed
+        return pa
+
+    def advance_state(self, keys: BarrierKeys, state: NoiseState,
+                      active) -> NoiseState:
+        """The state every tier carries to step t+1: the 32-byte key that
+        generated xi_t plus the participation set it was drawn over. Keeps
+        the incoming structure (legacy 2-field states stay 2-field)."""
+        pa = None if getattr(state, "prev_active", None) is None else active
+        return NoiseState(prev_key=masking._raw(keys.key_xi),
+                          has_prev=jnp.ones((), jnp.bool_), prev_active=pa)
+
+    # -- per-stream noise scales --------------------------------------------
+    def _stream_scales(self, bound, active, state: NoiseState):
+        """(s_t, s_prev, prev_active): per-silo noise stds at steps t / t-1.
+        k active streams at sigma_c/sqrt(k) sum to std exactly sigma_c."""
+        sc = self.priv.sigma * jnp.asarray(bound, jnp.float32)
+        s = sc / jnp.sqrt(self.active_count(active))
+        pa = self.prev_active(state)
+        k_prev = jnp.maximum(jnp.sum(pa.astype(jnp.float32)), 1.0)
+        return s, sc / jnp.sqrt(k_prev), pa
+
+    # -- stage: norms --------------------------------------------------------
+    def norms(self, stacked) -> jax.Array:
+        """Per-silo global norms off a stacked (n, P) packed buffer (padding
+        is exactly zero, so one reduce replaces the per-leaf sumsq chain)."""
+        g32 = stacked.astype(jnp.float32)
+        return jnp.sqrt(jnp.sum(g32 * g32, axis=-1))
+
+    def norm_tree(self, tree) -> jax.Array:
+        return clipping.global_norm(tree)
+
+    # -- stage: dynamic_bound ------------------------------------------------
+    def dynamic_bound(self, norms, active, clip_key, fallback) -> jax.Array:
+        """§4.3 percentile protocol over the *active* silos' norms; returns
+        ``fallback`` (the carried bound) when dynamic clipping is off."""
+        if not (self.priv.enabled and self.priv.dynamic_clip):
+            return jnp.asarray(fallback, jnp.float32)
+        pcts = clipping.local_percentiles(norms, mask=active)
+        return dynamic_bound_from_percentiles(pcts[None], self.priv, clip_key)
+
+    # -- stage: clip_scale ---------------------------------------------------
+    def clip_scale(self, norm, bound) -> jax.Array:
+        return clipping.clip_scale(norm, bound)
+
+    def clip_scales(self, norms, bound, active) -> jax.Array:
+        """DP-SGD clip factors, zeroed for dropped silos — the single place
+        deciding who contributes what weight to the aggregate."""
+        scales = clipping.clip_scale(norms, bound) if self.priv.enabled \
+            else jnp.ones_like(norms, jnp.float32)
+        return scales * active.astype(scales.dtype)
+
+    # -- stage: masked_aggregate ---------------------------------------------
+    def masked_aggregate(self, stacked, scales) -> jax.Array:
+        """sum_i scales_i * g_i over a stacked (n, P) buffer — one registry
+        dispatch. Central tiers elide the zero-sum masks (they cancel in the
+        aggregate by construction); the per-silo view of this stage is
+        :meth:`silo_contribution`."""
+        impl = self.policy.inner if self.policy.mode == "packed" else "auto"
+        return clip_ops.clipped_sum(stacked, scales, impl=impl)
+
+    def silo_contribution(self, g_tree, silo, scale, active, keys: BarrierKeys,
+                          state: NoiseState, bound):
+        """One silo's wire contribution: clip + zero-sum mask over the active
+        ring + its sigma_c/sqrt(k) noise share + its lambda-correction share,
+        in one fused dispatch. Summing the active silos' outputs (psum on the
+        barrier tier, updater-side reduce on the wire tier) yields exactly
+        ``sum_i clip(g_i) + sigma*C*(xi_t - lam*xi_{t-1})``.
+
+        Returns a packed (P,) buffer under the packed policy (psum it, then
+        :meth:`finalize`), a pytree under perleaf (which supports the full
+        ring only — elastic runs require the packed policy)."""
+        priv = self.priv
+        silo = jnp.asarray(silo, jnp.int32)
+        gate = active[silo].astype(jnp.float32)
+        sigma_c = priv.sigma * jnp.asarray(bound, jnp.float32)
+        use_prev = priv.noise_lambda > 0.0
+        if priv.mask_mode == "none":
+            # confidentiality-only sync: clipped gradient, no DP terms
+            scaled = scale * gate
+            return jax.tree.map(
+                lambda x: (x.astype(jnp.float32) * scaled).astype(x.dtype),
+                g_tree)
+        s, s_prev, pa = self._stream_scales(bound, active, state)
+        hp = jnp.where(state.has_prev, 1.0, 0.0)
+        lam_gate = priv.noise_lambda * hp * gate * pa[silo].astype(jnp.float32)
+        if self.policy.mode == "perleaf":
+            # legacy per-leaf stream family; the ring is static (full), so a
+            # partial participation set would leave uncancelled +-B*r terms
+            # in the aggregate. build_train_step rejects elastic barrier
+            # runs up front; the wire tier passes concrete masks, caught here
+            if not isinstance(active, jax.core.Tracer) \
+                    and not bool(jnp.all(active)):
+                raise ValueError(
+                    "the per-leaf mask family only builds the full static "
+                    "ring; dropping silos needs the packed policy (lift the "
+                    "dp_noise_tree=perleaf override for elastic runs)")
+            scaled = jax.tree.map(
+                lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                g_tree)
+            masked = masking.pairwise_mask_tree(
+                scaled, keys.key_r, keys.key_xi, silo, self.n_silos,
+                sigma_c, priv.mask_scale * sigma_c, impl="perleaf")
+            if use_prev:
+                prev = masking.pairwise_mask_only(
+                    g_tree, keys.key_r, state.prev_key, silo, self.n_silos,
+                    sigma_c, 0.0, impl="perleaf")
+                masked = jax.tree.map(
+                    lambda m, p: m - lam_gate * p.astype(m.dtype), masked, prev)
+            return masked
+        packed = flatbuf.pack(self.layout, g_tree)
+        return fused_ops.clip_mask_packed(
+            packed, scale * gate, masking._raw(keys.key_r),
+            masking._raw(keys.key_xi), state.prev_key, silo, self.n_silos,
+            sigma_c, priv.mask_scale * sigma_c * gate, lam_gate,
+            use_pairwise=True, use_prev=use_prev, impl=self.policy.inner,
+            nxt=self.next_active(silo, active), noise_scale=s * gate,
+            prev_noise_scale=s_prev)
+
+    def finalize(self, agg):
+        """Aggregated contribution -> fp32 gradient pytree (unpacks packed
+        buffers; perleaf aggregates are already trees)."""
+        if isinstance(agg, jax.Array) and agg.ndim == 1:
+            return flatbuf.unpack(self.layout, agg, dtype=jnp.float32)
+        return jax.tree.map(lambda x: x.astype(jnp.float32), agg)
+
+    # -- stage: corrected_noise ----------------------------------------------
+    def corrected_noise_packed(self, g_sum, keys: BarrierKeys,
+                               state: NoiseState, bound, active) -> jax.Array:
+        """Post-reduce corrected DP noise on a packed (P,) aggregate: the
+        *same* per-silo streams the barrier/wire tiers emit, accumulated
+        sequentially in silo order (bit-identical to the wire updater's
+        reduce). Dropped silos contribute no fresh noise; the correction
+        share of silo i applies iff it was active at t-1 and is active now."""
+        priv = self.priv
+        s, s_prev, pa = self._stream_scales(bound, active, state)
+        kx = masking._raw(keys.key_xi)
+        hp = jnp.where(state.has_prev, 1.0, 0.0)
+        use_prev = priv.noise_lambda > 0.0
+        sigma_c = priv.sigma * jnp.asarray(bound, jnp.float32)
+        # each silo's share is drawn on a zero buffer then added, so the fp
+        # association matches the wire updater's left-to-right reduce of
+        # per-silo contributions (bit-identical noise across tiers)
+        zeros = jnp.zeros_like(g_sum, jnp.float32)
+
+        def add_share(i, out):
+            gate = active[i].astype(jnp.float32)
+            lam_gate = priv.noise_lambda * hp * gate * pa[i].astype(jnp.float32)
+            share = fused_ops.clip_mask_packed(
+                zeros, 1.0, kx, kx, state.prev_key, jnp.asarray(i, jnp.int32),
+                self.n_silos, sigma_c, 0.0, lam_gate, use_pairwise=False,
+                use_prev=use_prev, impl=self.policy.inner,
+                noise_scale=s * gate, prev_noise_scale=s_prev)
+            return out + share
+
+        out = g_sum.astype(jnp.float32)
+        if self.n_silos <= 8:  # unrolled: lets XLA fuse the few-silo case
+            for i in range(self.n_silos):
+                out = add_share(i, out)
+            return out
+        # large deployments: a fori_loop keeps trace/compile size O(1) in
+        # n_silos (same sequential association, so numerics are unchanged)
+        return jax.lax.fori_loop(0, self.n_silos, add_share, out)
+
+    def corrected_noise_tree(self, g_sum_tree, keys: BarrierKeys,
+                             state: NoiseState, bound, active):
+        """Tree-level corrected noise for the central tiers. Packed policy
+        routes through :meth:`corrected_noise_packed`; perleaf keeps the
+        sharding-preserving per-leaf jax.random construction (one stream at
+        full sigma_c — the aggregate noise std is k-independent, so elastic
+        participation needs no per-stream bookkeeping there)."""
+        if self.policy.mode == "packed":
+            packed = flatbuf.pack(self.layout, g_sum_tree)
+            noisy = self.corrected_noise_packed(packed, keys, state, bound,
+                                                active)
+            return flatbuf.unpack(self.layout, noisy, dtype=jnp.float32)
+        sigma_c = self.priv.sigma * jnp.asarray(bound, jnp.float32)
+        noise, _ = noise_correction.corrected_noise(
+            g_sum_tree, keys.key_xi, state, sigma_c, self.priv.noise_lambda)
+        return jax.tree.map(
+            lambda g, n: (g.astype(jnp.float32) + n).astype(g.dtype),
+            g_sum_tree, noise)
+
+    # -- composed runs --------------------------------------------------------
+    def run_central(self, g_stacked, norms, keys: BarrierKeys,
+                    state: NoiseState, bound, clip_key, active):
+        """The whole stage graph for a central tier holding all silo grads as
+        a stacked (n, P) packed buffer (the vmap-fused tier). Returns
+        (noisy fp32 tree, new_state, bound)."""
+        bound = self.dynamic_bound(norms, active, clip_key, bound)
+        scales = self.clip_scales(norms, bound, active)
+        g_sum = self.masked_aggregate(g_stacked, scales)
+        if self.priv.enabled:
+            noisy = self.corrected_noise_packed(g_sum, keys, state, bound,
+                                                active)
+            new_state = self.advance_state(keys, state, active)
+        else:
+            noisy, new_state = g_sum, state
+        return flatbuf.unpack(self.layout, noisy, dtype=jnp.float32), \
+            new_state, bound
+
+
+def reduce_contributions(updates):
+    """The model updater's aggregation stage: sequential sum of masked
+    per-silo updates in silo order (matching the engine's noise-accumulation
+    order, so wire-tier aggregates are bit-reproducible against
+    :meth:`DPPipeline.corrected_noise_packed`)."""
+    total = None
+    for u in updates:
+        total = u if total is None else jax.tree.map(
+            lambda a, b: a + b.astype(a.dtype), total, u)
+    return total

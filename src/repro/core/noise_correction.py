@@ -21,6 +21,10 @@ import jax.numpy as jnp
 class NoiseState(NamedTuple):
     prev_key: jax.Array  # raw (2,) uint32 key data that generated xi_{t-1}
     has_prev: jax.Array  # bool scalar (first step has no xi_{t-1})
+    # (n_silos,) bool: which silos contributed xi_{t-1} (elastic membership).
+    # None for legacy/static callers — treated as all-active; the per-stream
+    # std of xi_{t-1} is sigma_c/sqrt(k_{t-1}) with k_{t-1} = sum(prev_active)
+    prev_active: Optional[jax.Array] = None
 
 
 def _raw(key) -> jax.Array:
@@ -35,8 +39,12 @@ def _typed(key) -> jax.Array:
     return key
 
 
-def init_state(key) -> NoiseState:
-    return NoiseState(prev_key=_raw(key), has_prev=jnp.zeros((), jnp.bool_))
+def init_state(key, n_silos: int = 0) -> NoiseState:
+    """``n_silos > 0`` allocates the participation memory (elastic runs);
+    0 keeps the legacy 2-field state (all silos implicitly active)."""
+    prev_active = jnp.ones((n_silos,), jnp.bool_) if n_silos else None
+    return NoiseState(prev_key=_raw(key), has_prev=jnp.zeros((), jnp.bool_),
+                      prev_active=prev_active)
 
 
 def _noise_like(key, tree, scale):

@@ -28,9 +28,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import PrivacyConfig
-from repro.core import clipping, masking
+from repro.core import dp_pipeline, flatbuf
 from repro.core.accountant import PrivacyAccountant
 from repro.core.barrier import BarrierKeys, step_keys
+from repro.core.dp_pipeline import DPPipeline
+from repro.core.noise_correction import NoiseState, init_state
 from repro.core.tee.attestation import (AttestationService, LaunchPolicy,
                                         measure_config, measure_modules)
 from repro.core.tee.channels import SecureChannel, derive_key, open_sealed, seal
@@ -50,6 +52,16 @@ def _deser(blob: bytes):
     with np.load(io.BytesIO(data)) as z:
         flat = [z[k] for k in z.files]
     return jax.tree_util.tree_unflatten(treedef, [jnp.asarray(x) for x in flat])
+
+
+def _guarded_modules():
+    """The service code whose measurement the KDS gates key release on: the
+    DP engine plus the kernel-level pieces it composes."""
+    import repro.core.barrier as _b
+    import repro.core.clipping as _c
+    import repro.core.dp_pipeline as _p
+    import repro.core.masking as _m
+    return [_p, _b, _c, _m]
 
 
 # ---------------------------------------------------------------------------
@@ -78,10 +90,7 @@ class Component:
     report: object = None
 
     def attest(self, policy: LaunchPolicy):
-        import repro.core.barrier as _b
-        import repro.core.clipping as _c
-        import repro.core.masking as _m
-        measurement = measure_modules([_b, _c, _m])
+        measurement = measure_modules(_guarded_modules())
         self.report = self.service.attestation.issue(
             self.name, measurement, policy.hash(), nonce=self.name + "-n0")
         return self.report
@@ -90,7 +99,9 @@ class Component:
 @dataclass
 class DataHandler(Component):
     """One per dataset owner: runs the model owner's (sandboxed) data-handling
-    code on the silo's data; emits encrypted, clipped, DP-masked updates."""
+    code on the silo's data; emits encrypted, clipped, DP-masked updates via
+    the shared :class:`DPPipeline` engine (the same ``silo_contribution``
+    stage the SPMD barrier tier psums)."""
     silo_idx: int = 0
     data: Optional[dict] = None
     sandbox: Sandbox = field(default_factory=Sandbox)
@@ -98,15 +109,25 @@ class DataHandler(Component):
 
     def compute_update(self, params_blob: bytes, grad_fn: Callable,
                        priv: PrivacyConfig, keys: BarrierKeys, n_silos: int,
-                       clip_bound: float) -> bytes:
+                       clip_bound: float, active=None,
+                       noise_state: Optional[NoiseState] = None) -> bytes:
+        """``active``: this round's participation set distributed by the
+        admin alongside the step keys — the zero-sum ring and this silo's
+        noise share are built over the actual contributors. ``noise_state``
+        carries the admin's step-(t-1) key for the lambda correction."""
         params = _deser(params_blob)
         # untrusted model-owner code inside the sandbox (R1/R2)
         loss, grads = self.sandbox.run(grad_fn, params, self.data)
-        grads, norm = clipping.clip_tree(grads, clip_bound)
-        sigma_c = priv.sigma * clip_bound
-        masked = masking.pairwise_mask_tree(
-            grads, keys.key_r, keys.key_xi, self.silo_idx, n_silos,
-            sigma_c, priv.mask_scale * sigma_c, impl="jnp")
+        pipe = DPPipeline(priv, flatbuf.layout_of(grads), n_silos)
+        active = pipe.full_active() if active is None \
+            else jnp.asarray(active, jnp.bool_)
+        state = noise_state if noise_state is not None \
+            else init_state(jnp.zeros((2,), jnp.uint32), n_silos=n_silos)
+        norm = pipe.norm_tree(grads)
+        scale = pipe.clip_scale(norm, clip_bound)
+        contrib = pipe.silo_contribution(grads, self.silo_idx, scale, active,
+                                         keys, state, clip_bound)
+        masked = pipe.finalize(contrib)
         payload = _ser({"update": masked, "loss": jnp.asarray(loss),
                         "norm": norm})
         return self.channel.send(payload)
@@ -115,35 +136,61 @@ class DataHandler(Component):
 @dataclass
 class ModelUpdater(Component):
     """Single component for the model owner: aggregates masked updates and
-    applies the (sandboxed) model-updating code. Never sees raw gradients."""
+    applies the (sandboxed) model-updating code. Never sees raw gradients;
+    the aggregate is divided by the silos that actually contributed."""
     channels: dict = field(default_factory=dict)
     received_updates: list = field(default_factory=list)
 
     def aggregate(self, blobs: dict, params, update_fn: Callable, lr: float,
-                  n_silos: int):
-        total = None
-        losses = []
+                  n_silos: Optional[int] = None):
+        """``n_silos`` is accepted for call-site compatibility but the
+        divisor is the actual contribution count (len(blobs)) — dropped
+        silos shrink the mean, matching the SPMD tiers."""
+        updates, losses = [], []
         for silo, blob in blobs.items():
             payload = _deser(self.channels[silo].recv(blob))
             self.received_updates.append(
                 jax.tree.map(np.asarray, payload["update"]))
             losses.append(float(payload["loss"]))
-            total = payload["update"] if total is None else jax.tree.map(
-                lambda a, b: a + b.astype(a.dtype), total, payload["update"])
-        mean_update = jax.tree.map(lambda g: g / n_silos, total)
+            updates.append(payload["update"])
+        total = dp_pipeline.reduce_contributions(updates)
+        n_contrib = max(len(blobs), 1)
+        mean_update = jax.tree.map(lambda g: g / n_contrib, total)
         new_params = update_fn(params, mean_update, lr)
         return new_params, float(np.mean(losses))
 
 
 @dataclass
 class Admin(Component):
-    """Coordinates iterations and owns the per-step mask/noise keys (32 bytes
-    per step — the whole of the 'mask distribution' on the pairwise path)."""
+    """Coordinates iterations, owns the per-step mask/noise keys (32 bytes
+    per step — the whole of the 'mask distribution' on the pairwise path),
+    the session's participation record and the noise-correction state."""
     root_key: Optional[jax.Array] = None
     accountant: Optional[PrivacyAccountant] = None
+    n_silos: int = 0
+    noise_state: Optional[NoiseState] = None
 
     def keys_for_step(self, step: int) -> BarrierKeys:
         return step_keys(self.root_key, jnp.asarray(step))
+
+    def state_for_step(self) -> NoiseState:
+        """The correction state handlers need this round (prev step's 32-byte
+        noise key + the participation set it was drawn over)."""
+        if self.noise_state is None:
+            self.noise_state = init_state(jnp.zeros((2,), jnp.uint32),
+                                          n_silos=max(self.n_silos, 1))
+        return self.noise_state
+
+    def advance(self, keys: BarrierKeys, active) -> None:
+        """End-of-round bookkeeping: roll the correction state forward and
+        record the contribution count with the accountant."""
+        from repro.core.masking import _raw
+        active = jnp.asarray(active, jnp.bool_)
+        self.noise_state = NoiseState(prev_key=_raw(keys.key_xi),
+                                      has_prev=jnp.ones((), jnp.bool_),
+                                      prev_active=active)
+        if self.accountant is not None:
+            self.accountant.step(contributions=int(active.sum()))
 
 
 class ManagementService:
@@ -157,10 +204,7 @@ class ManagementService:
         self.sessions: dict[str, dict] = {}
 
     def expected_measurement(self) -> str:
-        import repro.core.barrier as _b
-        import repro.core.clipping as _c
-        import repro.core.masking as _m
-        return measure_modules([_b, _c, _m])
+        return measure_modules(_guarded_modules())
 
     def create_session(self, session_id: str, n_silos: int,
                        priv: PrivacyConfig) -> dict:

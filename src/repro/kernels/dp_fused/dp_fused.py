@@ -130,14 +130,15 @@ def _clip_mask_kernel(ints_ref, flts_ref, g_ref, o_ref, *, block_d: int,
                       use_pairwise: bool, use_prev: bool):
     di = pl.program_id(0)
     silo = ints_ref[0]
-    n = ints_ref[1]
+    nxt = ints_ref[1]     # pairwise ring neighbour (next *active* silo)
     key_r0, key_r1 = ints_ref[2].astype(jnp.uint32), ints_ref[3].astype(jnp.uint32)
     key_x0, key_x1 = ints_ref[4].astype(jnp.uint32), ints_ref[5].astype(jnp.uint32)
     key_p0, key_p1 = ints_ref[6].astype(jnp.uint32), ints_ref[7].astype(jnp.uint32)
     scale = flts_ref[0]
-    s = flts_ref[1]       # sigma_c / sqrt(n)
+    s = flts_ref[1]       # per-stream noise std (sigma_c / sqrt(k))
     b_scale = flts_ref[2]
     lam_gate = flts_ref[3]
+    s_prev = flts_ref[4]  # per-stream std of the step-(t-1) noise
 
     base = jnp.asarray(di * block_d).astype(jnp.uint32)
     idx = base + jax.lax.broadcasted_iota(jnp.uint32, (1, block_d), 1)
@@ -149,12 +150,11 @@ def _clip_mask_kernel(ints_ref, flts_ref, g_ref, o_ref, *, block_d: int,
 
     out = g_ref[...].astype(jnp.float32) * scale
     if use_pairwise:
-        nxt = jnp.where(silo + 1 == n, 0, silo + 1)
         out = out + b_scale * (stream(key_r0, key_r1, silo)
                                - stream(key_r0, key_r1, nxt))
     out = out + s * stream(key_x0, key_x1, silo)
     if use_prev:
-        out = out - lam_gate * (s * stream(key_p0, key_p1, silo))
+        out = out - lam_gate * (s_prev * stream(key_p0, key_p1, silo))
     o_ref[...] = out
 
 
@@ -163,22 +163,33 @@ def _clip_mask_kernel(ints_ref, flts_ref, g_ref, o_ref, *, block_d: int,
 def clip_mask_pallas(g, scale, key_r, key_xi, prev_key, silo, n_silos: int,
                      sigma_c, b_scale, lam_gate, use_pairwise: bool = True,
                      use_prev: bool = True, block_d: int = 1024,
-                     interpret: bool = True):
+                     interpret: bool = True, *, nxt=None, noise_scale=None,
+                     prev_noise_scale=None):
     """g: packed (P,) buffer; key_*: (2,) uint32; silo traceable int32.
-    Returns fp32 ``g*scale + b*(r_i - r_next) + s*xi_t - lam_gate*s*xi_prev``."""
+    Returns fp32 ``g*scale + b*(r_i - r_nxt) + s*xi_t - lam_gate*s_prev*xi_prev``.
+    ``nxt``/``noise_scale``/``prev_noise_scale`` default to the static-ring
+    construction (see ref.clip_mask_ref); the elastic engine passes the
+    active-set overrides through (all three may be traced scalars)."""
     P = g.shape[0]
     block_d = min(block_d, P)
     assert P % block_d == 0, (P, block_d)
+    if nxt is None:
+        nxt = (jnp.asarray(silo, jnp.int32) + 1) % n_silos
+    if noise_scale is None:
+        noise_scale = jnp.asarray(sigma_c, jnp.float32) / jnp.sqrt(float(n_silos))
+    if prev_noise_scale is None:
+        prev_noise_scale = noise_scale
     ints = jnp.stack([
-        jnp.asarray(silo, jnp.int32), jnp.asarray(n_silos, jnp.int32),
+        jnp.asarray(silo, jnp.int32), jnp.asarray(nxt, jnp.int32),
         key_r[0].astype(jnp.int32), key_r[1].astype(jnp.int32),
         key_xi[0].astype(jnp.int32), key_xi[1].astype(jnp.int32),
         prev_key[0].astype(jnp.int32), prev_key[1].astype(jnp.int32)])
     flts = jnp.stack([
         jnp.asarray(scale, jnp.float32),
-        jnp.asarray(sigma_c, jnp.float32) / jnp.sqrt(float(n_silos)),
+        jnp.asarray(noise_scale, jnp.float32),
         jnp.asarray(b_scale, jnp.float32),
-        jnp.asarray(lam_gate, jnp.float32)])
+        jnp.asarray(lam_gate, jnp.float32),
+        jnp.asarray(prev_noise_scale, jnp.float32)])
 
     out = pl.pallas_call(
         functools.partial(_clip_mask_kernel, block_d=block_d,

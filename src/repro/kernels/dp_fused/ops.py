@@ -53,20 +53,26 @@ def _clip_sum_jnp(g, clip_bound):
                 doc="fused Pallas clip+mask+corrected-noise in VMEM")
 def _clip_mask_pallas(g, scale, key_r, key_xi, prev_key, silo, n_silos,
                       sigma_c, b_scale, lam_gate, use_pairwise=True,
-                      use_prev=True):
+                      use_prev=True, nxt=None, noise_scale=None,
+                      prev_noise_scale=None):
     return clip_mask_pallas(g, scale, key_r, key_xi, prev_key, silo, n_silos,
                             sigma_c, b_scale, lam_gate,
                             use_pairwise=use_pairwise, use_prev=use_prev,
-                            interpret=not on_tpu())
+                            interpret=not on_tpu(), nxt=nxt,
+                            noise_scale=noise_scale,
+                            prev_noise_scale=prev_noise_scale)
 
 
 @kernel_variant(CLIP_MASK, "jnp", priority=10,
                 doc="jnp reference (bit-identical streams)")
 def _clip_mask_jnp(g, scale, key_r, key_xi, prev_key, silo, n_silos, sigma_c,
-                   b_scale, lam_gate, use_pairwise=True, use_prev=True):
+                   b_scale, lam_gate, use_pairwise=True, use_prev=True,
+                   nxt=None, noise_scale=None, prev_noise_scale=None):
     return ref.clip_mask_ref(g, scale, key_r, key_xi, prev_key, silo, n_silos,
                              sigma_c, b_scale, lam_gate,
-                             use_pairwise=use_pairwise, use_prev=use_prev)
+                             use_pairwise=use_pairwise, use_prev=use_prev,
+                             nxt=nxt, noise_scale=noise_scale,
+                             prev_noise_scale=prev_noise_scale)
 
 
 def clip_sum_packed(g, clip_bound, impl: str = "auto"):
@@ -77,12 +83,16 @@ def clip_sum_packed(g, clip_bound, impl: str = "auto"):
 
 def clip_mask_packed(g, scale, key_r, key_xi, prev_key, silo, n_silos: int,
                      sigma_c, b_scale, lam_gate, use_pairwise: bool = True,
-                     use_prev: bool = True, impl: str = "auto"):
-    """g: packed (P,) -> fp32 clipped+masked+corrected buffer (see ref)."""
+                     use_prev: bool = True, impl: str = "auto", nxt=None,
+                     noise_scale=None, prev_noise_scale=None):
+    """g: packed (P,) -> fp32 clipped+masked+corrected buffer (see ref).
+    ``nxt``/``noise_scale``/``prev_noise_scale`` are the elastic-membership
+    overrides (ring neighbour + per-stream stds for the active counts)."""
     return REGISTRY.dispatch(
         CLIP_MASK, impl, {"P": g.shape[-1]},
         g, scale, key_r, key_xi, prev_key, silo, n_silos, sigma_c, b_scale,
-        lam_gate, use_pairwise=use_pairwise, use_prev=use_prev)
+        lam_gate, use_pairwise=use_pairwise, use_prev=use_prev, nxt=nxt,
+        noise_scale=noise_scale, prev_noise_scale=prev_noise_scale)
 
 
 # ---------------------------------------------------------------------------

@@ -34,22 +34,34 @@ def clip_sum_ref(g, clip_bound):
 
 def clip_mask_ref(g, scale, key_r, key_xi, prev_key, silo, n_silos, sigma_c,
                   b_scale, lam_gate, use_pairwise: bool = True,
-                  use_prev: bool = True):
+                  use_prev: bool = True, *, nxt=None, noise_scale=None,
+                  prev_noise_scale=None):
     """g: packed (P,) buffer. Returns fp32
-    ``g*scale + b*(r_i - r_next) + s*xi_t - lam_gate*s*xi_prev`` with
-    s = sigma_c/sqrt(n); the pairwise r-terms telescope across silos and the
-    xi streams sum to N(0, sigma_c^2 I)."""
+    ``g*scale + b*(r_i - r_nxt) + s*xi_t - lam_gate*s_prev*xi_prev``.
+
+    Defaults reproduce the static-membership construction exactly:
+    ``nxt = (silo+1) % n_silos`` (full pairwise ring) and
+    ``s = s_prev = sigma_c/sqrt(n_silos)``. The elastic engine
+    (core/dp_pipeline) overrides them: ``nxt`` is the next *active* silo in
+    the ring (so the r-terms still telescope over any participation set) and
+    ``noise_scale``/``prev_noise_scale`` carry sigma_c/sqrt(k) for the actual
+    contributing counts at steps t and t-1 (both may be traced scalars)."""
     P = g.shape[0]
     idx = jnp.arange(P, dtype=jnp.uint32)
-    s = jnp.asarray(sigma_c, jnp.float32) / jnp.sqrt(float(n_silos))
+    if noise_scale is None:
+        noise_scale = jnp.asarray(sigma_c, jnp.float32) / jnp.sqrt(float(n_silos))
+    s = jnp.asarray(noise_scale, jnp.float32)
+    s_prev = s if prev_noise_scale is None \
+        else jnp.asarray(prev_noise_scale, jnp.float32)
     out = g.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
     if use_pairwise:
-        nxt = (silo + 1) % n_silos
+        if nxt is None:
+            nxt = (silo + 1) % n_silos
         r_i = _stream(key_r, idx, silo)
         r_next = _stream(key_r, idx, nxt)
         out = out + jnp.asarray(b_scale, jnp.float32) * (r_i - r_next)
     out = out + s * _stream(key_xi, idx, silo)
     if use_prev:
         xp = _stream(prev_key, idx, silo)
-        out = out - jnp.asarray(lam_gate, jnp.float32) * (s * xp)
+        out = out - jnp.asarray(lam_gate, jnp.float32) * (s_prev * xp)
     return out

@@ -30,6 +30,14 @@ def main():
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--epsilon-budget", type=float, default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--elastic", action="store_true",
+                    help="thread a per-step silo participation set through "
+                         "the step; straggler escalations drop a silo for a "
+                         "cooldown window (DP invariants preserved)")
+    ap.add_argument("--drop-silos", default=None,
+                    help="deterministic dropout demo: comma-separated "
+                         "step:silo[:cooldown] triples, e.g. '10:3:5,20:2' "
+                         "(silo 3 out for steps 10-14, silo 2 out from 20 on)")
     args = ap.parse_args()
 
     sess = Session.from_config(
@@ -39,13 +47,44 @@ def main():
                               noise_lambda=args.lam, n_silos=args.silos,
                               sync_path=args.sync_path),
         optimizer=OptimizerConfig(name="adamw", lr=args.lr))
+
+    silo_schedule = None
+    if args.drop_silos:
+        # size the schedule by the count the step actually aggregates over
+        # (the barrier tier pins it to the mesh's silo extent, not --silos)
+        from repro.distributed.steps import effective_n_silos
+        n_silos = effective_n_silos(sess.run_cfg)
+        drops = []
+        for spec in args.drop_silos.split(","):
+            parts = [int(x) for x in spec.split(":")]
+            step0, silo = parts[0], parts[1]
+            cooldown = parts[2] if len(parts) > 2 else 0
+            if silo >= n_silos:
+                print(f"warning: --drop-silos silo {silo} ignored "
+                      f"(step aggregates over {n_silos} silos)")
+                continue
+            drops.append((step0, silo, cooldown))
+
+        # stateless step -> mask, so the schedule holds across checkpoint
+        # resume (a run restored past step0 still sees the drop in effect)
+        def silo_schedule(step, _d=drops, _n=n_silos):
+            import numpy as np
+            active = np.ones(_n, bool)
+            for step0, silo, cooldown in _d:
+                if step >= step0 and (cooldown == 0 or step < step0 + cooldown):
+                    active[silo] = False
+            return active
+
     result = sess.train(steps=args.steps, batch_size=args.batch,
                         seq_len=args.seq, checkpoint_dir=args.checkpoint_dir,
                         checkpoint_every=25, log_every=10,
-                        epsilon_budget=args.epsilon_budget)
+                        epsilon_budget=args.epsilon_budget,
+                        elastic=args.elastic, silo_schedule=silo_schedule)
     final = result.final
     print(f"done at step {result.step}: loss={final.get('loss', float('nan')):.4f}"
-          + (f" eps={final.get('epsilon'):.3f}" if "epsilon" in final else ""))
+          + (f" eps={final.get('epsilon'):.3f}" if "epsilon" in final else "")
+          + (f" contributions={final.get('n_contributions'):.0f}"
+             if "n_contributions" in final else ""))
 
 
 if __name__ == "__main__":

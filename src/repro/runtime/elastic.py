@@ -1,22 +1,32 @@
-"""Elastic scaling orchestration (DESIGN.md §6): shrink or grow the mesh in
-response to failures/preemptions and resume from the last checkpoint.
+"""Elastic scaling orchestration (DESIGN.md §6): two decision layers a
+cluster controller calls.
 
-The jit-level machinery already supports this — checkpoints are saved with
-global-shape metadata and ``checkpointer.restore`` re-shards to whatever mesh
-is current. This module owns the *decision* layer a cluster controller calls:
+**Device elasticity** — shrink or grow the mesh in response to
+failures/preemptions and resume from the last checkpoint. The jit-level
+machinery already supports this — checkpoints are saved with global-shape
+metadata and ``checkpointer.restore`` re-shards to whatever mesh is current:
 
   plan_mesh(healthy_devices)  -> the largest valid (data, model) mesh config
-  resume(plan, ...)           -> restore + rebuild the jitted step for it
+  resume_plan(plan, ...)      -> restore + rebuild the jitted step for it
 
 Invariants enforced: the model axis must keep TP dims divisible (we prefer
 shrinking the data axis — losing data parallelism only changes throughput,
 not the program); the DP accountant state rides along so the privacy budget
 is continuous across re-scales.
+
+**Silo elasticity** — :class:`SiloMembership` tracks which data owners
+contribute each step *without* re-compiling anything: the step function takes
+an ``(n_silos,) bool`` participation set and the DP engine
+(core/dp_pipeline.py) keeps the zero-sum-mask and noise-correction invariants
+over any active subset. Dropping a straggling or failed silo is therefore a
+per-step decision, and rejoining is just flipping its bit back on.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional, Sequence
+
+import numpy as np
 
 from repro.configs.base import MeshConfig
 
@@ -65,3 +75,71 @@ def resume_plan(ckpt_dir: str, state_template, plan: ElasticPlan,
     with shardings built from distributed.sharding_rules for the new mesh."""
     from repro.checkpoint import checkpointer
     return checkpointer.restore(ckpt_dir, state_template, shardings=shardings)
+
+
+# ---------------------------------------------------------------------------
+# Silo membership (elastic participation sets)
+
+
+@dataclass
+class SiloMembership:
+    """Which data owners contribute each training step.
+
+    ``drop(silo, step)`` removes a silo from the active set starting at
+    ``step`` — with ``cooldown`` steps it rejoins automatically, otherwise it
+    stays out until :meth:`rejoin`. ``min_active`` is the quorum: a drop that
+    would leave fewer contributors is refused (recorded in ``events``). The
+    trainer feeds :meth:`active_at` to the jitted step; shapes never change,
+    so membership churn costs no recompilation.
+    """
+
+    n_silos: int
+    min_active: int = 1
+    cooldown_steps: int = 0  # default for drop() calls without a cooldown
+    # silo -> step at which it rejoins (None = until rejoin() is called)
+    _out: dict = field(default_factory=dict)
+    events: list = field(default_factory=list)
+
+    def active_at(self, step: int) -> np.ndarray:
+        """(n_silos,) bool participation set for ``step`` (auto-rejoins
+        expired cooldowns)."""
+        for silo in [s for s, until in self._out.items()
+                     if until is not None and step >= until]:
+            self.rejoin(silo, step=step)
+        mask = np.ones(self.n_silos, bool)
+        for silo in self._out:
+            mask[silo] = False
+        return mask
+
+    def n_active(self, step: int) -> int:
+        return int(self.active_at(step).sum())
+
+    def drop(self, silo: int, step: int = 0,
+             cooldown: Optional[int] = None) -> bool:
+        """Remove ``silo`` from the active set. Returns False (and records a
+        refusal) when the quorum would be broken."""
+        if silo in self._out:
+            return True
+        if len(self._out) + 1 > self.n_silos - self.min_active:
+            self.events.append({"action": "drop_refused", "silo": silo,
+                                "step": step, "reason": "min_active quorum"})
+            return False
+        cd = self.cooldown_steps if cooldown is None else cooldown
+        self._out[silo] = step + cd if cd else None
+        self.events.append({"action": "drop", "silo": silo, "step": step,
+                            "rejoin_at": self._out[silo]})
+        return True
+
+    def drop_one(self, step: int = 0, cooldown: Optional[int] = None) -> Optional[int]:
+        """Drop the highest-index active silo — the placeholder attribution
+        a cluster layer would replace with the actually-straggling host."""
+        for silo in range(self.n_silos - 1, -1, -1):
+            if silo not in self._out:
+                return silo if self.drop(silo, step, cooldown) else None
+        return None
+
+    def rejoin(self, silo: int, step: int = 0) -> None:
+        if silo in self._out:
+            del self._out[silo]
+            self.events.append({"action": "rejoin", "silo": silo,
+                                "step": step})

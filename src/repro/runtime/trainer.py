@@ -11,15 +11,17 @@ from __future__ import annotations
 import signal
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import checkpointer
 from repro.configs.base import RunConfig
 from repro.core.accountant import PrivacyAccountant
 from repro.distributed import steps as steps_mod
+from repro.runtime.elastic import SiloMembership
 from repro.runtime.straggler import StragglerPolicy
 
 
@@ -39,6 +41,13 @@ class TrainerConfig:
     # wall time at each metrics flush instead
     step_deadline_s: Optional[float] = None
     metrics_flush_every: int = 50  # bound on how long metrics stay on-device
+    # elastic silo membership: thread a per-step participation set through the
+    # jitted step (the DP engine keeps the mask/noise invariants over any
+    # active subset) and let straggler escalations drop a silo for
+    # ``elastic_cooldown`` steps instead of only logging a reschedule request
+    elastic: bool = False
+    elastic_cooldown: int = 10
+    elastic_min_active: int = 1
 
 
 @dataclass
@@ -49,10 +58,16 @@ class Trainer:
     next_batch: Callable[[], dict]
     batch_state: Optional[object] = None  # object with state_dict/load_state_dict
     mesh: Optional[object] = None
+    # elastic membership: who contributes each step. ``silo_schedule``
+    # (step -> bool sequence) overrides ``membership`` when given — handy for
+    # deterministic dropout/rejoin scenarios and tests
+    membership: Optional[SiloMembership] = None
+    silo_schedule: Optional[Callable[[int], Sequence[bool]]] = None
     metrics_log: list = field(default_factory=list)
     _preempted: bool = False
     _pending: list = field(default_factory=list)  # on-device metric entries
     _window_t0: Optional[float] = None  # flush-window start (adaptive mode)
+    _step: int = 0  # current step (straggler escalation needs it)
 
     def __post_init__(self):
         priv = self.run_cfg.privacy
@@ -61,9 +76,39 @@ class Trainer:
             delta=priv.delta, lam=priv.noise_lambda,
             q=1.0, mode="analytic") if priv.enabled else None
         self.straggler = StragglerPolicy(self.tcfg.step_deadline_s)
+        self._owns_mesh = False
+        if priv.enabled and priv.sync_path == "barrier" and self.mesh is None:
+            # the barrier tier shard_maps over the silo axes; the
+            # Session/CLI path doesn't carry a mesh, so build one from the
+            # run config and make it ambient for the whole fit
+            from repro.launch.mesh import make_mesh_from_config
+            self.mesh = make_mesh_from_config(self.run_cfg.mesh)
+            self._owns_mesh = True
+        self.n_silos = steps_mod.effective_n_silos(self.run_cfg)
+        if self.tcfg.elastic and self.membership is None:
+            self.membership = SiloMembership(
+                self.n_silos, min_active=self.tcfg.elastic_min_active,
+                cooldown_steps=self.tcfg.elastic_cooldown)
+        if self.tcfg.elastic and self.straggler.on_escalate is None \
+                and self.silo_schedule is None:
+            # escalation drops one silo for the cooldown window (placeholder
+            # attribution; a cluster layer would name the straggling host).
+            # Not wired when a silo_schedule pins the participation set —
+            # the schedule is authoritative and a shadow drop would only
+            # consume quorum without ever taking effect
+            self.straggler.on_escalate = lambda decision: \
+                self.membership.drop_one(self._step)
         self.train_step = steps_mod.build_train_step(
-            self.model, self.run_cfg, abstract_mesh=self.mesh)
+            self.model, self.run_cfg, abstract_mesh=self.mesh,
+            elastic=self.tcfg.elastic)
         self._jit_step = jax.jit(self.train_step, donate_argnums=(0,))
+
+    def _active_for(self, step: int) -> np.ndarray:
+        if self.silo_schedule is not None:
+            return np.asarray(self.silo_schedule(step), bool)
+        if self.membership is not None:
+            return self.membership.active_at(step)
+        return np.ones(self.n_silos, bool)
 
     # -- preemption --------------------------------------------------------
     def install_preemption_handler(self):
@@ -120,7 +165,19 @@ class Trainer:
         last = checkpointer.latest_step(self.tcfg.checkpoint_dir)
         if last is None:
             return state, 0
-        state, extra, step = checkpointer.restore(self.tcfg.checkpoint_dir, state)
+        try:
+            state, extra, step = checkpointer.restore(self.tcfg.checkpoint_dir,
+                                                      state)
+        except KeyError:
+            # legacy checkpoint written before elastic membership: no
+            # noise_state.prev_active leaf. Restore with the 2-field state
+            # and treat the pre-restore history as all-active
+            legacy = state._replace(
+                noise_state=state.noise_state._replace(prev_active=None))
+            restored, extra, step = checkpointer.restore(
+                self.tcfg.checkpoint_dir, legacy)
+            state = restored._replace(noise_state=restored.noise_state._replace(
+                prev_active=jnp.ones((self.n_silos,), jnp.bool_)))
         if self.accountant and extra.get("accountant"):
             self.accountant = PrivacyAccountant.from_state_dict(extra["accountant"])
         if self.batch_state is not None and extra.get("batch_state"):
@@ -131,6 +188,15 @@ class Trainer:
 
     # -- main loop ---------------------------------------------------------
     def fit(self, state, root_key) -> tuple:
+        from contextlib import ExitStack
+
+        with ExitStack() as stack:
+            if self._owns_mesh:
+                from repro import compat
+                stack.enter_context(compat.set_mesh(self.mesh))
+            return self._fit(state, root_key)
+
+    def _fit(self, state, root_key) -> tuple:
         state, start = self.try_restore(state)
         step = start
         while step < self.tcfg.total_steps:
@@ -144,8 +210,11 @@ class Trainer:
             batch = self.next_batch()
             if self._window_t0 is None:
                 self._window_t0 = time.time()
+            self._step = step
+            active = self._active_for(step)
             t0 = time.time()
-            state, metrics = self._jit_step(state, batch, root_key)
+            state, metrics = self._jit_step(state, batch, root_key,
+                                            jnp.asarray(active))
             if self.tcfg.step_deadline_s is not None:
                 # a hard deadline needs true step time -> block per step
                 jax.block_until_ready(metrics)
@@ -162,7 +231,7 @@ class Trainer:
                 self.straggler.observe(dt, update_baseline=False)
             entry = {"step": step, **metrics, "step_time_s": dt}
             if self.accountant:
-                self.accountant.step()
+                self.accountant.step(contributions=int(active.sum()))
                 entry["epsilon"] = self.accountant.epsilon()
             self._pending.append(entry)
             step += 1

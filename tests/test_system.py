@@ -46,12 +46,13 @@ def test_fused_path_equals_manual_dp_sgd():
         g, _ = clipping.clip_tree(g, 1.0)
         manual = g if manual is None else jax.tree.map(
             lambda a, b: a + b, manual, g)
-    # the fused path regenerates its noise via the packed flat-buffer engine;
-    # adding the same packed noise to the manual clipped sum must reproduce
-    # the aggregate exactly
-    expect, _ = barrier_mod.fused_noise(
-        jax.tree.map(lambda x: x.astype(jnp.float32), manual), priv, keys,
-        state.noise_state, jnp.float32(1.0), impl="packed")
+    # the fused path draws the engine's per-silo noise streams (the same
+    # construction the barrier/wire tiers psum); adding the exact stream sum
+    # to the manual clipped sum must reproduce the aggregate
+    noise = barrier_mod.aggregate_noise_from_streams(
+        state.params, keys, 4, priv.sigma * 1.0)
+    expect = jax.tree.map(
+        lambda m, n: m.astype(jnp.float32) + n, manual, noise)
     for a, b in zip(jax.tree.leaves(noisy), jax.tree.leaves(expect)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
 
