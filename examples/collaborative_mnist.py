@@ -66,3 +66,10 @@ print(f"\nlast wire update: std={w.std():.2f} (raw clipped grad scale ~1e-3) "
       f"-> the updater sees noise, the aggregate learns")
 print(f"privacy spent after {STEPS} steps: eps={sess.epsilon():.3f} "
       f"(delta=1e-5)")
+
+# the admin plane: per-silo spend over each owner's own participation
+# history (a silo that sat out steps spent less epsilon)
+from repro.analysis.report import privacy_spend_table  # noqa: E402
+
+print("\nper-silo spend report (the ledger the admin surfaces to owners):")
+print(privacy_spend_table(sess.privacy_report()))

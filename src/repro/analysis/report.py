@@ -1,4 +1,5 @@
-"""Generate the EXPERIMENTS.md roofline tables from dry-run artifacts."""
+"""Generate the EXPERIMENTS.md roofline tables from dry-run artifacts, and
+render the privacy ledger's per-silo spend reports for the admin plane."""
 from __future__ import annotations
 
 import json
@@ -7,6 +8,47 @@ from pathlib import Path
 from repro.configs import SHAPES, get_config, shape_applicability
 
 DRYRUN = Path("experiments/dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Privacy-ledger spend reports (core/privacy/ledger.py spend_report dicts)
+
+
+def _eps(x) -> str:
+    return "inf" if x is None else f"{x:.4f}"
+
+
+def privacy_spend_table(report: dict) -> str:
+    """Markdown table for one :meth:`PrivacyLedger.spend_report` dict: one
+    row per silo with its own participation history, spend and verdict."""
+    lines = [
+        f"mode={report['mode']} sigma={report['sigma']:.4g} "
+        f"delta={report['delta']:.1e} lam={report['lam']:.2f} "
+        f"steps={report['steps']} "
+        f"global eps={_eps(report['epsilon_global'])}",
+        "",
+        "| silo | steps in | steps out | epsilon | budget | remaining | status |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for s in report["silos"]:
+        budget = "—" if s["budget"] is None else f"{s['budget']:.4f}"
+        remaining = "—" if s["remaining"] is None else f"{s['remaining']:.4f}"
+        status = "EXHAUSTED" if s["exhausted"] else "ok"
+        lines.append(
+            f"| {s['silo']} | {s['steps_participated']} "
+            f"| {s['steps_sat_out']} | {_eps(s['epsilon'])} "
+            f"| {budget} | {remaining} | {status} |")
+    for e in report.get("exclusions", []):
+        lines.append(f"silo {e['silo']} excluded at step {e['step']} "
+                     f"(eps {_eps(e['epsilon'])} >= budget "
+                     f"{_eps(e['budget'])})")
+    return "\n".join(lines)
+
+
+def privacy_spend_summary(path: str | Path) -> str:
+    """Render a spend-report JSON file (as written by
+    ``launch/train.py --spend-report``)."""
+    return privacy_spend_table(json.loads(Path(path).read_text()))
 
 
 def load(mesh: str) -> dict:
@@ -79,5 +121,9 @@ def dryrun_summary(mesh: str) -> str:
 if __name__ == "__main__":
     import sys
     kind = sys.argv[1] if len(sys.argv) > 1 else "roofline"
-    mesh = sys.argv[2] if len(sys.argv) > 2 else "single"
-    print(roofline_table(mesh) if kind == "roofline" else dryrun_summary(mesh))
+    if kind == "privacy":
+        # python -m repro.analysis.report privacy SPEND_report.json
+        print(privacy_spend_summary(sys.argv[2]))
+    else:
+        mesh = sys.argv[2] if len(sys.argv) > 2 else "single"
+        print(roofline_table(mesh) if kind == "roofline" else dryrun_summary(mesh))

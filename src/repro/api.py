@@ -70,6 +70,7 @@ class Session:
     run_cfg: RunConfig
     model: Model
     seed: int = 0
+    _last_trainer: Optional[Trainer] = None  # most recent train() wiring
 
     # ------------------------------------------------------------------ ctor
     @classmethod
@@ -114,49 +115,78 @@ class Session:
     def trainer(self, *, total_steps: int = 50, checkpoint_dir: Optional[str] = None,
                 checkpoint_every: int = 25, log_every: int = 10,
                 epsilon_budget: Optional[float] = None,
+                silo_epsilon_budget: Optional[float] = None,
+                silo_budgets: Optional[dict] = None,
                 step_deadline_s: Optional[float] = None,
                 next_batch: Optional[Callable[[], dict]] = None,
                 batch_size: int = 8, seq_len: int = 128,
                 elastic: bool = False,
-                silo_schedule: Optional[Callable[[int], Any]] = None) -> Trainer:
+                silo_schedule: Optional[Callable[[int], Any]] = None,
+                silo_latency_hook: Optional[Callable[[int], Any]] = None) -> Trainer:
         """A wired Trainer; ``next_batch`` defaults to a synthetic LM stream.
 
         ``elastic=True`` threads a per-step silo participation set through
         the jitted step (straggler escalations drop a silo for a cooldown
         window; the DP engine keeps the zero-sum-mask and noise-correction
         invariants over any active subset). ``silo_schedule`` pins the
-        participation set deterministically: step -> bool sequence."""
+        participation set deterministically: step -> bool sequence.
+        ``silo_epsilon_budget`` (uniform) / ``silo_budgets`` (per-silo
+        overrides) arm the privacy ledger's enforcement: an exhausted silo is
+        excluded from the participation set with no rejoin until operator
+        override. ``silo_latency_hook`` feeds simulated per-silo latencies to
+        the straggler-attribution telemetry on the fused tiers."""
         tcfg = TrainerConfig(total_steps=total_steps,
                              checkpoint_every=checkpoint_every,
                              checkpoint_dir=checkpoint_dir,
                              log_every=log_every,
                              epsilon_budget=epsilon_budget,
+                             silo_epsilon_budget=silo_epsilon_budget,
+                             silo_budgets=silo_budgets,
                              step_deadline_s=step_deadline_s,
                              elastic=elastic or silo_schedule is not None)
         next_batch = next_batch or self.synthetic_batches(batch_size, seq_len)
         return Trainer(self.model, self.run_cfg, tcfg, next_batch,
-                       silo_schedule=silo_schedule)
+                       silo_schedule=silo_schedule,
+                       silo_latency_hook=silo_latency_hook)
 
     def train(self, *, steps: int = 50, batch_size: int = 8, seq_len: int = 128,
               next_batch: Optional[Callable[[], dict]] = None,
               checkpoint_dir: Optional[str] = None, checkpoint_every: int = 25,
               log_every: int = 10, epsilon_budget: Optional[float] = None,
+              silo_epsilon_budget: Optional[float] = None,
+              silo_budgets: Optional[dict] = None,
               step_deadline_s: Optional[float] = None,
               elastic: bool = False,
               silo_schedule: Optional[Callable[[int], Any]] = None,
+              silo_latency_hook: Optional[Callable[[int], Any]] = None,
               state=None) -> TrainResult:
         """Run (or resume) training through the fault-tolerant Trainer loop."""
         trainer = self.trainer(total_steps=steps, checkpoint_dir=checkpoint_dir,
                                checkpoint_every=checkpoint_every,
                                log_every=log_every, epsilon_budget=epsilon_budget,
+                               silo_epsilon_budget=silo_epsilon_budget,
+                               silo_budgets=silo_budgets,
                                step_deadline_s=step_deadline_s,
                                next_batch=next_batch, batch_size=batch_size,
                                seq_len=seq_len, elastic=elastic,
-                               silo_schedule=silo_schedule)
+                               silo_schedule=silo_schedule,
+                               silo_latency_hook=silo_latency_hook)
         state = state if state is not None else self.init_state()
+        # registered before fit so privacy_report() still surfaces the spend
+        # of a run that aborts mid-way (that audit matters most then)
+        self._last_trainer = trainer
         state, step = trainer.fit(state, jax.random.PRNGKey(self.seed + 1))
         return TrainResult(state=state, step=step,
                            metrics=trainer.metrics_log, trainer=trainer)
+
+    def privacy_report(self) -> Optional[dict]:
+        """The privacy ledger's spend report for the most recent ``train``
+        run: per-silo epsilon over each silo's own participation history,
+        budgets, remaining headroom and exclusion events. None before the
+        first run (or with privacy disabled)."""
+        if self._last_trainer is None:
+            return None
+        return self._last_trainer.spend_report()
 
     def synthetic_batches(self, batch_size: int, seq_len: int,
                           pool: Optional[int] = None) -> Callable[[], dict]:
@@ -243,11 +273,14 @@ class CollaborativeSession:
 
     Membership is elastic: ``drop_silo``/``rejoin_silo`` change who
     contributes from the next round on. The admin distributes the round's
-    participation set with the step keys, each active handler builds its
-    zero-sum mask over the ring of *active* silos (dp_pipeline engine — the
-    masks still telescope to zero and the aggregate noise std stays exactly
-    sigma*C for any active count), and the updater divides by the actual
-    contributors.
+    participation set *and* the ledger's budget verdicts with the step keys;
+    each active handler builds its zero-sum mask over the ring of *active*
+    silos (dp_pipeline engine — the masks still telescope to zero and the
+    aggregate noise std stays exactly sigma*C for any active count), refuses
+    inside the TEE boundary when its owner's budget is spent, and the
+    updater divides by the actual contributors. An exhausted silo is
+    excluded from membership with no rejoin until operator override
+    (``rejoin_silo(..., override=True)``).
     """
 
     service: Any
@@ -255,22 +288,35 @@ class CollaborativeSession:
     handlers: list
     updater: Any
     admin: Any
-    accountant: Any
+    accountant: Any  # the session's PrivacyLedger (admin-owned)
     n_silos: int
     clip_bound: float = 1.0
     membership: Any = None
+    telemetry: Any = None  # per-party step-time attribution
 
     @classmethod
     def from_silos(cls, silo_data: list, privacy: PrivacyConfig, *,
-                   session_id: str = "session", root_seed: int = 0) -> "CollaborativeSession":
-        """``silo_data``: one batch dict per dataset owner (stays silo-local)."""
-        from repro.core.accountant import PrivacyAccountant
+                   session_id: str = "session", root_seed: int = 0,
+                   silo_epsilon_budget: Optional[float] = None,
+                   silo_budgets: Optional[dict] = None) -> "CollaborativeSession":
+        """``silo_data``: one batch dict per dataset owner (stays silo-local).
+        ``silo_epsilon_budget``/``silo_budgets`` arm per-owner budget
+        enforcement; the ledger config joins the attestation measurement, so
+        components only get keys for the enforcement terms the owners saw."""
+        from repro.core.privacy import PrivacyLedger
         from repro.core.tee.channels import SecureChannel, derive_key
         from repro.core.tee.components import (Admin, DataHandler,
                                                ManagementService, ModelUpdater)
+        from repro.runtime.elastic import SiloMembership
+        from repro.runtime.straggler import SiloTelemetry
 
+        n = len(silo_data)
+        ledger = PrivacyLedger.from_privacy_config(
+            privacy, n, epsilon_budget=silo_epsilon_budget,
+            budgets=silo_budgets)
         svc = ManagementService()
-        svc.create_session(session_id, len(silo_data), privacy)
+        svc.create_session(session_id, n, privacy,
+                           ledger_config=ledger.config_dict())
         handlers = []
         for i, data in enumerate(silo_data):
             h = DataHandler(f"handler-{i}", svc, silo_idx=i, data=data)
@@ -285,16 +331,18 @@ class CollaborativeSession:
         for h in handlers:
             updater.channels[h.name] = SecureChannel(
                 svc.kds._records[f"dk-{h.silo_idx}"].key, h.name)
-        from repro.runtime.elastic import SiloMembership
 
         admin = Admin("admin", svc, root_key=jax.random.PRNGKey(root_seed),
-                      n_silos=len(silo_data))
-        accountant = PrivacyAccountant(sigma=privacy.sigma, delta=privacy.delta)
-        admin.accountant = accountant
+                      n_silos=n, ledger=ledger)
+        for h in handlers:
+            # handlers trust the attested admin for budget verdicts — the
+            # training driver can't fabricate an all-allowed vector
+            h.admin = admin
         return cls(service=svc, privacy=privacy, handlers=handlers,
-                   updater=updater, admin=admin, accountant=accountant,
-                   n_silos=len(silo_data), clip_bound=privacy.clip_bound,
-                   membership=SiloMembership(len(silo_data)))
+                   updater=updater, admin=admin, accountant=ledger,
+                   n_silos=n, clip_bound=privacy.clip_bound,
+                   membership=SiloMembership(n),
+                   telemetry=SiloTelemetry(n))
 
     def drop_silo(self, silo: int, step: Optional[int] = None,
                   cooldown: Optional[int] = None) -> bool:
@@ -304,9 +352,22 @@ class CollaborativeSession:
         step = self._next_round if step is None else step
         return self.membership.drop(silo, step, cooldown)
 
-    def rejoin_silo(self, silo: int, step: Optional[int] = None) -> None:
-        self.membership.rejoin(
-            silo, step=self._next_round if step is None else step)
+    def drop_slowest(self, step: Optional[int] = None,
+                     cooldown: Optional[int] = None) -> Optional[int]:
+        """Straggler escalation with real attribution: drop the silo whose
+        handler round-trips have been slowest (per-party timing recorded by
+        :meth:`step`)."""
+        step = self._next_round if step is None else step
+        return self.membership.drop_one(step, cooldown,
+                                        telemetry=self.telemetry)
+
+    def rejoin_silo(self, silo: int, step: Optional[int] = None,
+                    override: bool = False) -> bool:
+        """Budget-excluded owners only rejoin with ``override=True`` (the
+        operator decision after e.g. a fresh budget grant)."""
+        return self.membership.rejoin(
+            silo, step=self._next_round if step is None else step,
+            override=override)
 
     @property
     def _next_round(self) -> int:
@@ -314,30 +375,53 @@ class CollaborativeSession:
 
     def step(self, step_idx: int, params, grad_fn: Callable,
              update_fn: Callable, lr: float):
-        """One round: admin keys + participation set + correction state ->
-        active silo updates (clip + zero-sum DP mask over the active ring,
-        model-owner code sandboxed) -> updater aggregate over the actual
-        contributors -> admin advances the correction state and records the
-        contribution count. Returns (new_params, mean_loss)."""
+        """One round: admin keys + participation set + budget verdicts +
+        correction state -> active silo updates (clip + zero-sum DP mask over
+        the active ring, model-owner code sandboxed; handlers with a spent
+        budget refuse in-TEE) -> updater aggregate over the actual
+        contributors -> admin advances the correction state and the ledger
+        records the round's participation bitmask. Returns
+        (new_params, mean_loss)."""
         from repro.core.tee.components import _ser
 
         keys = self.admin.keys_for_step(step_idx)
-        active = self.membership.active_at(step_idx)
+        verdicts = self.admin.verdicts()
+        for silo in self.accountant.take_exclusions():
+            # budget-driven membership drop: no rejoin without override
+            self.membership.exclude(silo, step=step_idx, reason="budget")
+        active = self.membership.active_at(step_idx) & verdicts
         noise_state = self.admin.state_for_step()
         blob = _ser(params)
-        updates = {h.name: h.compute_update(blob, grad_fn, self.privacy, keys,
-                                            self.n_silos,
-                                            clip_bound=self.clip_bound,
-                                            active=active,
-                                            noise_state=noise_state)
-                   for h in self.handlers if active[h.silo_idx]}
+        updates = {}
+        for h in self.handlers:
+            if not active[h.silo_idx]:
+                continue
+            t0 = time.perf_counter()
+            updates[h.name] = h.compute_update(blob, grad_fn, self.privacy,
+                                               keys, self.n_silos,
+                                               clip_bound=self.clip_bound,
+                                               active=active,
+                                               noise_state=noise_state,
+                                               verdicts=verdicts)
+            # real per-party timing feeds straggler attribution
+            self.telemetry.observe(h.silo_idx, time.perf_counter() - t0)
+        if not updates:
+            raise RuntimeError(
+                "no silo may contribute this round (budgets exhausted or "
+                "membership empty); DP forbids further training")
         params, loss = self.updater.aggregate(updates, params, update_fn,
                                               lr=lr)
-        self.admin.advance(keys, active)  # accountant records contributions
+        self.admin.advance(keys, active)  # ledger records the bitmask
         return params, loss
 
-    def epsilon(self) -> float:
-        return self.accountant.epsilon()
+    def epsilon(self, silo: Optional[int] = None) -> float:
+        """Spent epsilon — global, or silo-specific over that owner's own
+        participation history."""
+        return self.accountant.epsilon(silo)
+
+    def privacy_report(self) -> dict:
+        """The admin-plane spend report (per-silo epsilon/budgets/verdicts)."""
+        return self.accountant.spend_report()
 
     @property
     def expected_measurement(self) -> str:

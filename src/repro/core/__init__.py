@@ -1,2 +1,3 @@
-# CITADEL++ core: the paper's privacy barrier (accountant, masking, clipping,
-# noise correction) + the TEE-protocol simulation substrate (core/tee).
+# CITADEL++ core: the paper's privacy barrier (privacy/ bounds + per-silo
+# ledger, masking, clipping, noise correction) + the TEE-protocol simulation
+# substrate (core/tee).

@@ -1,216 +1,19 @@
-"""Differential-privacy accounting (paper §4.1, Appendix A).
+"""Compatibility shim: DP accounting moved to the ``repro.core.privacy``
+subsystem (closed-form math in ``privacy/bounds.py``, the per-silo
+:class:`PrivacyLedger` + legacy scalar :class:`PrivacyAccountant` in
+``privacy/ledger.py``). Import from there in new code."""
+from repro.core.privacy.bounds import (DEFAULT_ORDERS, _log_comb, _phi,
+                                       calibrate_sigma, composed_delta,
+                                       composed_eps, corrected_delta,
+                                       gaussian_delta, gaussian_eps,
+                                       rdp_gaussian, rdp_subsampled_gaussian,
+                                       rdp_to_eps, sequence_eps,
+                                       sequence_sensitivity)
+from repro.core.privacy.ledger import PrivacyAccountant, PrivacyLedger
 
-Implements, in closed form where the paper gives one:
-  * the tight analytic Gaussian-mechanism bound (Eq. 1, Balle-Wang):
-        delta(eps) = Phi(-eps*s/D + D/(2s)) - e^eps * Phi(-eps*s/D - D/(2s))
-  * T-fold full-batch composition (D -> sqrt(T)*D)
-  * Theorem 1: noise-corrected DP-GD == plain DP-GD at sigma~ = (1-lambda)*sigma
-  * Eq. 14: sensitivity of n subsequent updates under noise correction
-  * noise calibration sigma(eps, delta, T) by bisection
-  * RDP accountant for the (optionally subsampled) Gaussian mechanism,
-    for minibatch DP-SGD runs (Mironov et al.; integer orders)
-
-Pure Python/NumPy — accountant state is tiny and must be checkpointable
-(the privacy budget has to survive restarts; see runtime/trainer.py).
-"""
-from __future__ import annotations
-
-import math
-from dataclasses import dataclass, field
-from typing import Optional
-
-
-def _phi(x: float) -> float:
-    return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
-
-
-def gaussian_delta(eps: float, sigma: float, sensitivity: float = 1.0) -> float:
-    """Tight delta(eps) for one Gaussian mechanism (Eq. 1)."""
-    if sigma <= 0:
-        return 1.0
-    a = sensitivity / sigma
-    # second term: exp(eps) * Phi(-eps/a - a/2) — guard exp overflow with the
-    # log-space product (Phi tail via erfc keeps precision)
-    x2 = -eps / a - a / 2.0
-    tail = 0.5 * math.erfc(-x2 / math.sqrt(2.0))
-    if tail == 0.0:
-        second = 0.0
-    else:
-        log_second = eps + math.log(tail)
-        second = math.exp(log_second) if log_second < 700 else math.inf
-    return _phi(-eps / a + a / 2.0) - second
-
-
-def composed_delta(eps: float, sigma: float, steps: int, sensitivity: float = 1.0) -> float:
-    """T-fold composition of the full-batch Gaussian mechanism."""
-    return gaussian_delta(eps, sigma, sensitivity * math.sqrt(steps))
-
-
-def corrected_delta(eps: float, sigma: float, steps: int, lam: float) -> float:
-    """Theorem 1: the noise-corrected mechanism's (eps, delta) upper bound is
-    the plain composition at sigma~ = (1 - lambda) * sigma."""
-    if not (0.0 <= lam < 1.0):
-        raise ValueError("lambda must be in [0, 1)")
-    return composed_delta(eps, (1.0 - lam) * sigma, steps)
-
-
-def gaussian_eps(delta: float, sigma: float, sensitivity: float = 1.0,
-                 hi: float = 1e4) -> float:
-    """Invert Eq. 1: smallest eps with delta(eps) <= delta (bisection)."""
-    if gaussian_delta(0.0, sigma, sensitivity) <= delta:
-        return 0.0
-    lo, h = 0.0, 1.0
-    while gaussian_delta(h, sigma, sensitivity) > delta:
-        h *= 2.0
-        if h > hi:
-            return math.inf
-    for _ in range(100):
-        mid = 0.5 * (lo + h)
-        if gaussian_delta(mid, sigma, sensitivity) > delta:
-            lo = mid
-        else:
-            h = mid
-    return h
-
-
-def composed_eps(delta: float, sigma: float, steps: int, sensitivity: float = 1.0) -> float:
-    return gaussian_eps(delta, sigma, sensitivity * math.sqrt(steps))
-
-
-def calibrate_sigma(eps: float, delta: float, steps: int = 1,
-                    sensitivity: float = 1.0) -> float:
-    """Smallest sigma giving (eps, delta)-DP after ``steps`` full-batch
-    iterations (analytic calibration, bisection on Eq. 1)."""
-    s = sensitivity * math.sqrt(steps)
-    lo, hi = 1e-6, 1.0
-    while gaussian_delta(eps, hi, s) > delta:
-        hi *= 2.0
-        if hi > 1e8:
-            raise ValueError("cannot calibrate")
-    for _ in range(100):
-        mid = 0.5 * (lo + hi)
-        if gaussian_delta(eps, mid, s) > delta:
-            lo = mid
-        else:
-            hi = mid
-    return hi
-
-
-# ---------------------------------------------------------------------------
-# Appendix A.3: sensitivity of n *subsequent* updates under noise correction
-
-
-def sequence_sensitivity(n: int, lam: float) -> float:
-    """Eq. 14: sqrt( sum_{l=0}^{n-1} (sum_{j=0}^{l} lam^j)^2 )."""
-    total = 0.0
-    geo = 0.0
-    for ell in range(n):
-        geo += lam ** ell  # sum_{j<=ell} lam^j
-        total += geo * geo
-    return math.sqrt(total)
-
-
-def sequence_eps(delta: float, sigma: float, n: int, lam: float) -> float:
-    """eps protecting a window of n subsequent updates (Fig. 14). Plain DP-GD
-    is the lam=0 case (sensitivity sqrt(n))."""
-    return gaussian_eps(delta, sigma, sequence_sensitivity(n, lam))
-
-
-# ---------------------------------------------------------------------------
-# RDP accountant (minibatch DP-SGD with Poisson sampling rate q)
-
-DEFAULT_ORDERS = tuple([1 + x / 10.0 for x in range(1, 100)] + list(range(12, 64)))
-
-
-def _log_comb(n: int, k: int) -> float:
-    return (math.lgamma(n + 1) - math.lgamma(k + 1) - math.lgamma(n - k + 1))
-
-
-def rdp_gaussian(alpha: float, sigma: float) -> float:
-    return alpha / (2.0 * sigma * sigma)
-
-
-def rdp_subsampled_gaussian(alpha: int, sigma: float, q: float) -> float:
-    """Integer-order RDP of the Poisson-subsampled Gaussian (Mironov et al.
-    2019, Thm 11 form via the binomial expansion)."""
-    if q == 0.0:
-        return 0.0
-    if q == 1.0:
-        return rdp_gaussian(alpha, sigma)
-    logs = []
-    for j in range(alpha + 1):
-        log_term = (_log_comb(alpha, j) + j * math.log(q)
-                    + (alpha - j) * math.log1p(-q)
-                    + (j * j - j) / (2.0 * sigma * sigma))
-        logs.append(log_term)
-    m = max(logs)
-    s = sum(math.exp(x - m) for x in logs)
-    return (m + math.log(s)) / (alpha - 1)
-
-
-def rdp_to_eps(rdp: float, alpha: float, delta: float) -> float:
-    """Tight-ish conversion (Balle et al. 2020 / Canonne et al.)."""
-    if alpha <= 1:
-        return math.inf
-    return rdp + math.log1p(-1.0 / alpha) - (math.log(delta) + math.log(alpha)) / (alpha - 1)
-
-
-@dataclass
-class PrivacyAccountant:
-    """Tracks cumulative privacy loss across training steps.
-
-    ``mode='analytic'`` uses the tight Gaussian composition (full-batch DP-GD,
-    as in the paper's appendix); ``mode='rdp'`` uses subsampled-Gaussian RDP
-    (minibatch DP-SGD with sampling rate q). Noise correction enters through
-    ``lam``: the *effective* per-release noise scale is sigma*(1-lam) for the
-    final-model guarantee (Thm. 1) while each step's added noise has scale
-    sigma (stronger per-iteration protection, Eq. 14).
-    """
-
-    sigma: float
-    delta: float
-    lam: float = 0.0
-    q: float = 1.0  # sampling rate; 1.0 = full batch
-    mode: str = "analytic"
-    steps: int = 0
-    # per-step active-silo counts (elastic membership). Composition is
-    # per-contribution (sensitivity C per silo regardless of how many
-    # contributed), so the counts don't change epsilon — they are the audit
-    # record per-silo accounting builds on (ROADMAP open item)
-    contributions: list = field(default_factory=list)
-    _rdp: dict = field(default_factory=dict)
-
-    def step(self, n: int = 1, contributions: Optional[int] = None) -> None:
-        self.steps += n
-        if contributions is not None:
-            self.contributions.extend([int(contributions)] * n)
-        if self.mode == "rdp":
-            sig = self.sigma * (1.0 - self.lam)
-            for a in range(2, 256):
-                self._rdp[a] = self._rdp.get(a, 0.0) + n * rdp_subsampled_gaussian(a, sig, self.q)
-
-    def epsilon(self) -> float:
-        if self.steps == 0:
-            return 0.0
-        if self.mode == "analytic":
-            sig = self.sigma * (1.0 - self.lam)
-            return composed_eps(self.delta, sig, self.steps)
-        return min(rdp_to_eps(r, a, self.delta) for a, r in self._rdp.items())
-
-    def spent(self) -> tuple[float, float]:
-        return self.epsilon(), self.delta
-
-    # -- persistence (fault tolerance: budget must survive restarts) --------
-    def state_dict(self) -> dict:
-        return {"sigma": self.sigma, "delta": self.delta, "lam": self.lam,
-                "q": self.q, "mode": self.mode, "steps": self.steps,
-                "contributions": list(self.contributions),
-                "rdp": dict(self._rdp)}
-
-    @classmethod
-    def from_state_dict(cls, d: dict) -> "PrivacyAccountant":
-        acc = cls(sigma=d["sigma"], delta=d["delta"], lam=d["lam"], q=d["q"],
-                  mode=d["mode"], steps=d["steps"],
-                  contributions=[int(c) for c in d.get("contributions", [])])
-        acc._rdp = {int(k): v for k, v in d["rdp"].items()}
-        return acc
+__all__ = [
+    "DEFAULT_ORDERS", "calibrate_sigma", "composed_delta", "composed_eps",
+    "corrected_delta", "gaussian_delta", "gaussian_eps", "rdp_gaussian",
+    "rdp_subsampled_gaussian", "rdp_to_eps", "sequence_eps",
+    "sequence_sensitivity", "PrivacyAccountant", "PrivacyLedger",
+]

@@ -30,6 +30,13 @@ with two cross-cutting decisions made exactly once:
   actual contribution count — elastic membership without touching the
   guarantee.
 
+Three mask constructions run through the same stages: ``pairwise`` (the
+key-derived zero-sum ring above), ``admin`` (the paper-faithful O(n*P) mask
+set the admin generates centrally — dropped silos get zero rows, the last
+active silo closes the sum to xi, and the -lam*xi_{t-1} correction rides in
+the closing row since the admin owns every stream), and ``none``
+(confidentiality-only clipped sync).
+
 Noise-correction under elasticity: the lambda-corrected term
 ``-lam*xi_{t-1}`` is carried *per silo*. :class:`NoiseState` remembers the
 previous step's participation set; at step t, silo i subtracts its own share
@@ -49,6 +56,7 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import PrivacyConfig
 from repro.core import clipping, flatbuf, masking, noise_correction
@@ -90,11 +98,10 @@ class DPPipeline:
 
     def __init__(self, priv: PrivacyConfig, layout: PackedLayout,
                  n_silos: int, policy: str = "packed"):
-        if priv.mask_mode not in ("pairwise", "none"):
+        if priv.mask_mode not in ("pairwise", "admin", "none"):
             raise ValueError(
-                f"DPPipeline supports mask_mode pairwise|none, got "
-                f"{priv.mask_mode!r} (admin masks stay a library-only "
-                f"baseline in core/masking.py)")
+                f"DPPipeline supports mask_mode pairwise|admin|none, got "
+                f"{priv.mask_mode!r}")
         self.priv = priv
         self.layout = layout
         self.n_silos = int(n_silos)
@@ -140,6 +147,47 @@ class DPPipeline:
         pa = self.prev_active(state)
         k_prev = jnp.maximum(jnp.sum(pa.astype(jnp.float32)), 1.0)
         return s, sc / jnp.sqrt(k_prev), pa
+
+    # -- admin mask construction (paper-faithful O(n*P) baseline) ------------
+    def _admin_correction(self, template, state: NoiseState, bound):
+        """The admin-owned ``lam*xi_{t-1}`` tree (regenerated from the
+        carried 32-byte key), or None when correction is off/unprimed."""
+        if not self.priv.noise_lambda > 0.0:
+            return None
+        sigma_c = self.priv.sigma * jnp.asarray(bound, jnp.float32)
+        hp = jnp.where(state.has_prev, 1.0, 0.0)
+        lam = self.priv.noise_lambda * hp
+        prev = masking.admin_xi(jax.random.wrap_key_data(state.prev_key),
+                                template, sigma_c)
+        return jax.tree.map(lambda x: lam * x, prev)
+
+    def _admin_mask_set(self, template, active, keys: BarrierKeys,
+                        state: NoiseState, bound):
+        """The stacked (n_silos, ...) mask trees for one step: zero rows for
+        dropped silos, active rows telescoping to xi_t - lam*xi_{t-1}.
+        ``template`` supplies leaf shapes only (values unread)."""
+        sigma_c = self.priv.sigma * jnp.asarray(bound, jnp.float32)
+        return masking.admin_masks(
+            jax.random.wrap_key_data(masking._raw(keys.key_xi)), template,
+            self.n_silos, sigma_c, self.priv.mask_scale * sigma_c,
+            active=active,
+            correction=self._admin_correction(template, state, bound))
+
+    def admin_noise_tree(self, g_sum_tree, keys: BarrierKeys,
+                         state: NoiseState, bound):
+        """Central-tier aggregate noise under admin masks: regenerate the
+        exact xi_t (and correction) the distributed mask set telescopes to,
+        so the fused/scan tiers reproduce the wire baseline's aggregate."""
+        sigma_c = self.priv.sigma * jnp.asarray(bound, jnp.float32)
+        xi = masking.admin_xi(
+            jax.random.wrap_key_data(masking._raw(keys.key_xi)),
+            g_sum_tree, sigma_c)
+        corr = self._admin_correction(g_sum_tree, state, bound)
+        if corr is not None:
+            xi = jax.tree.map(lambda a, c: a - c, xi, corr)
+        return jax.tree.map(
+            lambda g, n: (g.astype(jnp.float32) + n).astype(g.dtype),
+            g_sum_tree, xi)
 
     # -- stage: norms --------------------------------------------------------
     def norms(self, stacked) -> jax.Array:
@@ -202,6 +250,38 @@ class DPPipeline:
             return jax.tree.map(
                 lambda x: (x.astype(jnp.float32) * scaled).astype(x.dtype),
                 g_tree)
+        if priv.mask_mode == "admin":
+            # paper-faithful O(n*P) construction through the same stage:
+            # rows of dropped silos are zero, the last active silo closes
+            # the sum to xi, and the -lam*xi_{t-1} correction rides in the
+            # closing row — the admin owns every stream, so there are no
+            # per-silo shares to carry. With a concrete silo/active (the
+            # wire tier: one handler per message) each silo fetches only its
+            # own row, keeping the per-step total at the paper's O(n*P);
+            # traced callers (shard_map) fall back to the stacked set.
+            scaled = scale * gate
+            concrete = not (isinstance(silo, jax.core.Tracer)
+                            or isinstance(active, jax.core.Tracer))
+            if concrete:
+                sigma_c_a = priv.sigma * jnp.asarray(bound, jnp.float32)
+                act_np = np.asarray(active).astype(bool)
+                closing = int(self.n_silos - 1 - np.argmax(act_np[::-1]))
+                # only the closing row carries the correction; skip the
+                # O(P) xi_{t-1} regeneration for every other handler
+                corr = self._admin_correction(g_tree, state, bound) \
+                    if int(silo) == closing else None
+                row = masking.admin_mask_row(
+                    jax.random.wrap_key_data(masking._raw(keys.key_xi)),
+                    g_tree, self.n_silos, int(silo), sigma_c_a,
+                    priv.mask_scale * sigma_c_a, active=active,
+                    correction=corr)
+                return jax.tree.map(
+                    lambda x, m: x.astype(jnp.float32) * scaled + m * gate,
+                    g_tree, row)
+            masks = self._admin_mask_set(g_tree, active, keys, state, bound)
+            return jax.tree.map(
+                lambda x, m: x.astype(jnp.float32) * scaled + m[silo] * gate,
+                g_tree, masks)
         s, s_prev, pa = self._stream_scales(bound, active, state)
         hp = jnp.where(state.has_prev, 1.0, 0.0)
         lam_gate = priv.noise_lambda * hp * gate * pa[silo].astype(jnp.float32)
@@ -289,7 +369,10 @@ class DPPipeline:
         routes through :meth:`corrected_noise_packed`; perleaf keeps the
         sharding-preserving per-leaf jax.random construction (one stream at
         full sigma_c — the aggregate noise std is k-independent, so elastic
-        participation needs no per-stream bookkeeping there)."""
+        participation needs no per-stream bookkeeping there). Admin mode
+        regenerates the exact xi the O(n*P) mask set telescopes to."""
+        if self.priv.mask_mode == "admin":
+            return self.admin_noise_tree(g_sum_tree, keys, state, bound)
         if self.policy.mode == "packed":
             packed = flatbuf.pack(self.layout, g_sum_tree)
             noisy = self.corrected_noise_packed(packed, keys, state, bound,
@@ -311,6 +394,10 @@ class DPPipeline:
         bound = self.dynamic_bound(norms, active, clip_key, bound)
         scales = self.clip_scales(norms, bound, active)
         g_sum = self.masked_aggregate(g_stacked, scales)
+        if self.priv.enabled and self.priv.mask_mode == "admin":
+            g_tree = flatbuf.unpack(self.layout, g_sum, dtype=jnp.float32)
+            noisy_tree = self.admin_noise_tree(g_tree, keys, state, bound)
+            return noisy_tree, self.advance_state(keys, state, active), bound
         if self.priv.enabled:
             noisy = self.corrected_noise_packed(g_sum, keys, state, bound,
                                                 active)

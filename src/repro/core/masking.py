@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.dispatch import kernel_variant, REGISTRY
 from repro.kernels.dp_fused import ops as fused_ops
@@ -109,23 +110,109 @@ def pairwise_mask_only(shapes_tree, key_r, key_xi, silo, n_silos: int,
 # Admin-generated masks (paper-faithful wire protocol)
 
 
-def admin_masks(key: jax.Array, template, n_silos: int, sigma_c, b_scale: float):
+def admin_masks(key: jax.Array, template, n_silos: int, sigma_c, b_scale: float,
+                active=None, correction=None):
     """Generate the full set of n masks (stacked on a leading silo axis) such
     that sum_i m_i = xi ~ N(0, sigma_c^2 I). This is the O(n * P) object the
-    paper's admin distributes; kept for the faithful baseline + tests."""
+    paper's admin distributes; DPPipeline's ``mask_mode='admin'`` runs the
+    faithful baseline through the shared stage graph on top of it.
+
+    ``active``: optional (n_silos,) participation set — dropped silos get
+    zero masks and the *last active* silo closes the sum, so the active
+    masks still telescope to xi for any subset. ``correction``: optional
+    tree folded into the closing row (the admin-owned noise-correction term
+    ``-lam*xi_{t-1}``; the admin generates every mask centrally, so the
+    correction rides in the masks rather than per-silo shares)."""
     ku, kxi = jax.random.split(key)
-
-    def per_leaf(ku, kxi, leaf):
-        u = jax.random.normal(ku, (n_silos - 1,) + leaf.shape, jnp.float32) * b_scale
-        xi = jax.random.normal(kxi, leaf.shape, jnp.float32) * sigma_c
-        last = xi - jnp.sum(u, axis=0)
-        return jnp.concatenate([u, last[None]], axis=0)
-
     leaves, treedef = jax.tree.flatten(template)
     kus = jax.random.split(ku, len(leaves))
     kxis = jax.random.split(kxi, len(leaves))
+    corr_leaves = jax.tree.leaves(correction) if correction is not None \
+        else [None] * len(leaves)
+
+    # one construction for every case (active=None = all silos), drawing
+    # each u row from its own subkey — the SAME streams admin_mask_row uses,
+    # so a handler reconstructing only its row stays consistent with the
+    # distributed set
+    act = jnp.ones((n_silos,), jnp.float32) if active is None \
+        else jnp.asarray(active, jnp.float32)
+    # the closing row is the last *active* silo (argmax finds the first
+    # max of the reversed gates = the last set bit)
+    closing = n_silos - 1 - jnp.argmax(act[::-1])
+    onehot = (jnp.arange(n_silos) == closing).astype(jnp.float32)
+
+    def per_leaf(ku, kxi, leaf, corr):
+        shape_1 = (n_silos,) + (1,) * leaf.ndim
+        row_keys = jax.random.split(ku, n_silos)
+        u = jax.vmap(lambda k: jax.random.normal(k, leaf.shape,
+                                                 jnp.float32))(row_keys)
+        u = u * b_scale * act.reshape(shape_1)
+        xi = jax.random.normal(kxi, leaf.shape, jnp.float32) * sigma_c
+        if corr is not None:
+            xi = xi - corr.astype(jnp.float32)
+        # sequential subtraction in index order — the identical fp
+        # association admin_mask_row uses, so single rows reconstruct
+        # bit-equal (gated terms subtract exact zeros)
+        close_row = xi
+        for i in range(n_silos):
+            close_row = close_row - u[i] * (1.0 - onehot[i])
+        oh = onehot.reshape(shape_1)
+        return u * (1.0 - oh) + oh * close_row[None]
+
     return jax.tree.unflatten(
-        treedef, [per_leaf(a, b, l) for a, b, l in zip(kus, kxis, leaves)])
+        treedef, [per_leaf(a, b, l, c)
+                  for a, b, l, c in zip(kus, kxis, leaves, corr_leaves)])
+
+
+def admin_mask_row(key: jax.Array, template, n_silos: int, silo: int, sigma_c,
+                   b_scale: float, active=None, correction=None):
+    """One silo's row of the :func:`admin_masks` set (identical streams),
+    without materializing the stack: O(P) for a non-closing silo, O(k*P)
+    for the closing one — so n handlers each fetching their own row cost
+    O(n*P) total, exactly the admin's distribution cost in the paper.
+    Requires a *concrete* ``silo``/``active`` (the wire tier's case; traced
+    callers use the stacked construction)."""
+    silo = int(silo)
+    act = np.ones(n_silos, bool) if active is None \
+        else np.asarray(active).astype(bool)
+    closing = int(n_silos - 1 - np.argmax(act[::-1]))
+    ku, kxi = jax.random.split(key)
+    leaves, treedef = jax.tree.flatten(template)
+    kus = jax.random.split(ku, len(leaves))
+    kxis = jax.random.split(kxi, len(leaves))
+    corr_leaves = jax.tree.leaves(correction) if correction is not None \
+        else [None] * len(leaves)
+
+    def per_leaf(ku_l, kxi_l, leaf, corr):
+        row_keys = jax.random.split(ku_l, n_silos)
+        if silo != closing:
+            u = jax.random.normal(row_keys[silo], leaf.shape, jnp.float32)
+            return u * b_scale * float(act[silo])
+        xi = jax.random.normal(kxi_l, leaf.shape, jnp.float32) * sigma_c
+        if corr is not None:
+            xi = xi - corr.astype(jnp.float32)
+        for i in range(n_silos):
+            if act[i] and i != closing:
+                xi = xi - jax.random.normal(row_keys[i], leaf.shape,
+                                            jnp.float32) * b_scale
+        return xi
+
+    return jax.tree.unflatten(
+        treedef, [per_leaf(a, b, l, c)
+                  for a, b, l, c in zip(kus, kxis, leaves, corr_leaves)])
+
+
+def admin_xi(key: jax.Array, template, sigma_c):
+    """Just the xi streams of the admin construction (same key-split
+    structure as :func:`admin_masks`), so the central tiers and the
+    lambda-correction can regenerate the exact aggregate noise the masks
+    telescope to."""
+    _, kxi = jax.random.split(key)
+    leaves, treedef = jax.tree.flatten(template)
+    kxis = jax.random.split(kxi, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [jax.random.normal(k, l.shape, jnp.float32) * sigma_c
+                  for k, l in zip(kxis, leaves)])
 
 
 def apply_admin_mask(grads, masks, silo: int):

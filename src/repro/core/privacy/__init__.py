@@ -1,0 +1,27 @@
+"""Privacy subsystem (paper §4.1, Appendix A): closed-form bounds +
+per-silo accounting with enforceable budgets.
+
+* :mod:`repro.core.privacy.bounds` — the paper's closed-form math (analytic
+  Gaussian bound, composition, Thm. 1 correction, Eq. 14 sensitivity, RDP).
+* :mod:`repro.core.privacy.ledger` — :class:`PrivacyLedger`: per-silo
+  participation history (per-step bitmasks), per-silo RDP state, per-silo
+  ``epsilon_budget``s, enforcement verdicts and the admin-plane
+  :meth:`~PrivacyLedger.spend_report`; plus the legacy scalar
+  :class:`PrivacyAccountant`.
+
+``repro.core.accountant`` remains as a compatibility shim re-exporting both.
+"""
+from repro.core.privacy.bounds import (DEFAULT_ORDERS, calibrate_sigma,
+                                       composed_delta, composed_eps,
+                                       corrected_delta, gaussian_delta,
+                                       gaussian_eps, rdp_gaussian,
+                                       rdp_subsampled_gaussian, rdp_to_eps,
+                                       sequence_eps, sequence_sensitivity)
+from repro.core.privacy.ledger import PrivacyAccountant, PrivacyLedger
+
+__all__ = [
+    "DEFAULT_ORDERS", "calibrate_sigma", "composed_delta", "composed_eps",
+    "corrected_delta", "gaussian_delta", "gaussian_eps", "rdp_gaussian",
+    "rdp_subsampled_gaussian", "rdp_to_eps", "sequence_eps",
+    "sequence_sensitivity", "PrivacyAccountant", "PrivacyLedger",
+]

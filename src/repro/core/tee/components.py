@@ -18,6 +18,7 @@ Workflow (paper Fig. 1):
 """
 from __future__ import annotations
 
+import hashlib
 import io
 import pickle
 from dataclasses import dataclass, field
@@ -29,7 +30,7 @@ import numpy as np
 
 from repro.configs.base import PrivacyConfig
 from repro.core import dp_pipeline, flatbuf
-from repro.core.accountant import PrivacyAccountant
+from repro.core.privacy import PrivacyLedger
 from repro.core.barrier import BarrierKeys, step_keys
 from repro.core.dp_pipeline import DPPipeline
 from repro.core.noise_correction import NoiseState, init_state
@@ -56,12 +57,16 @@ def _deser(blob: bytes):
 
 def _guarded_modules():
     """The service code whose measurement the KDS gates key release on: the
-    DP engine plus the kernel-level pieces it composes."""
+    DP engine, the privacy ledger (budget enforcement is part of the trusted
+    computing base — malicious training code must not be able to swap it
+    out) and the kernel-level pieces they compose."""
     import repro.core.barrier as _b
     import repro.core.clipping as _c
     import repro.core.dp_pipeline as _p
     import repro.core.masking as _m
-    return [_p, _b, _c, _m]
+    import repro.core.privacy.bounds as _pb
+    import repro.core.privacy.ledger as _pl
+    return [_p, _pl, _pb, _b, _c, _m]
 
 
 # ---------------------------------------------------------------------------
@@ -89,10 +94,27 @@ class Component:
     service: "ManagementService"
     report: object = None
 
+    def __post_init__(self):
+        # deployment snapshot: the ledger config in force when this
+        # component was launched. The component measures *its own* launch
+        # parameters — a component deployed against different enforcement
+        # terms genuinely attests to a different value (the check is not
+        # self-fulfilling against the verifier's expectation)
+        self.launch_ledger_config = dict(self.service.ledger_config) \
+            if self.service is not None else {}
+
+    def measurement(self) -> str:
+        code = measure_modules(_guarded_modules())
+        if not self.launch_ledger_config:
+            return code
+        return hashlib.sha256(
+            (code + measure_config(self.launch_ledger_config)).encode()
+        ).hexdigest()
+
     def attest(self, policy: LaunchPolicy):
-        measurement = measure_modules(_guarded_modules())
         self.report = self.service.attestation.issue(
-            self.name, measurement, policy.hash(), nonce=self.name + "-n0")
+            self.name, self.measurement(), policy.hash(),
+            nonce=self.name + "-n0")
         return self.report
 
 
@@ -106,15 +128,31 @@ class DataHandler(Component):
     data: Optional[dict] = None
     sandbox: Sandbox = field(default_factory=Sandbox)
     channel: Optional[SecureChannel] = None
+    # the (attested) admin this handler trusts for budget verdicts; when
+    # set, caller-supplied verdicts are ignored — an untrusted driver can't
+    # fabricate an all-allowed vector
+    admin: Optional["Admin"] = None
 
     def compute_update(self, params_blob: bytes, grad_fn: Callable,
                        priv: PrivacyConfig, keys: BarrierKeys, n_silos: int,
                        clip_bound: float, active=None,
-                       noise_state: Optional[NoiseState] = None) -> bytes:
+                       noise_state: Optional[NoiseState] = None,
+                       verdicts=None) -> bytes:
         """``active``: this round's participation set distributed by the
         admin alongside the step keys — the zero-sum ring and this silo's
         noise share are built over the actual contributors. ``noise_state``
-        carries the admin's step-(t-1) key for the lambda correction."""
+        carries the admin's step-(t-1) key for the lambda correction.
+        ``verdicts``: the per-silo budget verdict vector. With a wired
+        ``admin`` (the normal session setup) the handler fetches the
+        verdicts from that attested component itself and ignores the
+        caller's value, so an untrusted training driver can neither omit
+        nor fabricate them — enforcement sits inside the TEE boundary."""
+        if self.admin is not None:
+            verdicts = self.admin.verdicts()
+        if verdicts is not None and not bool(np.asarray(verdicts)[self.silo_idx]):
+            raise PermissionError(
+                f"silo {self.silo_idx}: owner's privacy budget is exhausted "
+                f"(ledger verdict); refusing to compute an update")
         params = _deser(params_blob)
         # untrusted model-owner code inside the sandbox (R1/R2)
         loss, grads = self.sandbox.run(grad_fn, params, self.data)
@@ -164,14 +202,31 @@ class ModelUpdater(Component):
 class Admin(Component):
     """Coordinates iterations, owns the per-step mask/noise keys (32 bytes
     per step — the whole of the 'mask distribution' on the pairwise path),
-    the session's participation record and the noise-correction state."""
+    the session's privacy ledger (per-silo spend, budgets and verdicts) and
+    the noise-correction state."""
     root_key: Optional[jax.Array] = None
-    accountant: Optional[PrivacyAccountant] = None
+    ledger: Optional[PrivacyLedger] = None
     n_silos: int = 0
     noise_state: Optional[NoiseState] = None
 
+    # legacy spelling: the ledger *is* the session accountant
+    @property
+    def accountant(self) -> Optional[PrivacyLedger]:
+        return self.ledger
+
+    @accountant.setter
+    def accountant(self, value) -> None:
+        self.ledger = value
+
     def keys_for_step(self, step: int) -> BarrierKeys:
         return step_keys(self.root_key, jnp.asarray(step))
+
+    def verdicts(self) -> np.ndarray:
+        """Per-silo budget verdicts the admin distributes with the step keys
+        (True = the owner still has budget). All-allowed without a ledger."""
+        if self.ledger is None:
+            return np.ones(max(self.n_silos, 1), bool)
+        return self.ledger.allowed_mask()
 
     def state_for_step(self) -> NoiseState:
         """The correction state handlers need this round (prev step's 32-byte
@@ -183,14 +238,16 @@ class Admin(Component):
 
     def advance(self, keys: BarrierKeys, active) -> None:
         """End-of-round bookkeeping: roll the correction state forward and
-        record the contribution count with the accountant."""
+        record the round's participation bitmask with the ledger (the write
+        that attributes this round's privacy loss to exactly the silos that
+        contributed, and may flip budget verdicts for the next round)."""
         from repro.core.masking import _raw
         active = jnp.asarray(active, jnp.bool_)
         self.noise_state = NoiseState(prev_key=_raw(keys.key_xi),
                                       has_prev=jnp.ones((), jnp.bool_),
                                       prev_active=active)
-        if self.accountant is not None:
-            self.accountant.step(contributions=int(active.sum()))
+        if self.ledger is not None:
+            self.ledger.record(np.asarray(active))
 
 
 class ManagementService:
@@ -202,13 +259,41 @@ class ManagementService:
         self.storage = UntrustedStorage()
         self.policy = LaunchPolicy()
         self.sessions: dict[str, dict] = {}
+        self.ledger_config: dict = {}
 
     def expected_measurement(self) -> str:
-        return measure_modules(_guarded_modules())
+        """Guarded code measurement, extended with the session's ledger
+        config once a session exists: per-silo budgets are part of what the
+        owners agreed to, so a service launched with different enforcement
+        parameters measures differently and the KDS withholds keys."""
+        code = measure_modules(_guarded_modules())
+        if not self.ledger_config:
+            return code
+        return hashlib.sha256(
+            (code + measure_config(self.ledger_config)).encode()).hexdigest()
 
     def create_session(self, session_id: str, n_silos: int,
-                       priv: PrivacyConfig) -> dict:
+                       priv: PrivacyConfig,
+                       ledger_config: Optional[dict] = None) -> dict:
+        if ledger_config is not None:
+            cfg = ledger_config
+        else:
+            # default must be structurally identical to what a real
+            # ledger's config_dict() yields for these terms, or two
+            # semantically-equal sessions would measure differently
+            cfg = PrivacyLedger.from_privacy_config(priv, n_silos).config_dict()
+        if self.sessions and cfg != self.ledger_config:
+            # the measurement gating *all* keys on this service binds one
+            # ledger config; silently swapping it would deny earlier
+            # sessions' components their keys. One service instance = one
+            # enforcement config — deploy another service for another.
+            raise ValueError(
+                "this ManagementService already measures a different ledger "
+                "config; deploy a separate service for a session with "
+                "different enforcement terms")
+        self.ledger_config = cfg
         s = {"id": session_id, "n_silos": n_silos, "priv": priv,
-             "progress": 0, "components": {}}
+             "progress": 0, "components": {},
+             "ledger_config": dict(cfg)}
         self.sessions[session_id] = s
         return s

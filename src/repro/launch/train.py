@@ -8,6 +8,7 @@ mesh comes from the runtime device set.
 from __future__ import annotations
 
 import argparse
+import json
 
 from repro.api import Session
 from repro.configs.base import OptimizerConfig, PrivacyConfig
@@ -27,8 +28,24 @@ def main():
     ap.add_argument("--no-privacy", action="store_true")
     ap.add_argument("--silos", type=int, default=4)
     ap.add_argument("--sync-path", default="fused", choices=("fused", "barrier"))
+    ap.add_argument("--mask-mode", default="pairwise",
+                    choices=("pairwise", "admin", "none"),
+                    help="zero-sum mask construction: key-derived pairwise "
+                         "(default), the paper-faithful O(n*P) admin masks, "
+                         "or none (confidentiality-only)")
     ap.add_argument("--checkpoint-dir", default=None)
-    ap.add_argument("--epsilon-budget", type=float, default=None)
+    ap.add_argument("--epsilon-budget", type=float, default=None,
+                    help="global budget: stop once the session epsilon "
+                         "reaches this")
+    ap.add_argument("--silo-epsilon-budget", type=float, default=None,
+                    help="per-silo budget: a silo whose own epsilon (over "
+                         "the steps it contributed to) reaches this is "
+                         "excluded from the participation set, no rejoin "
+                         "without operator override; training stops once no "
+                         "silo may contribute")
+    ap.add_argument("--spend-report", default=None, metavar="PATH",
+                    help="write the ledger's per-silo spend report JSON here "
+                         "at exit")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--elastic", action="store_true",
                     help="thread a per-step silo participation set through "
@@ -45,7 +62,8 @@ def main():
         privacy=PrivacyConfig(enabled=not args.no_privacy, sigma=args.sigma,
                               clip_bound=1.0, dynamic_clip=args.dynamic_clip,
                               noise_lambda=args.lam, n_silos=args.silos,
-                              sync_path=args.sync_path),
+                              sync_path=args.sync_path,
+                              mask_mode=args.mask_mode),
         optimizer=OptimizerConfig(name="adamw", lr=args.lr))
 
     silo_schedule = None
@@ -79,12 +97,23 @@ def main():
                         seq_len=args.seq, checkpoint_dir=args.checkpoint_dir,
                         checkpoint_every=25, log_every=10,
                         epsilon_budget=args.epsilon_budget,
+                        silo_epsilon_budget=args.silo_epsilon_budget,
                         elastic=args.elastic, silo_schedule=silo_schedule)
     final = result.final
     print(f"done at step {result.step}: loss={final.get('loss', float('nan')):.4f}"
           + (f" eps={final.get('epsilon'):.3f}" if "epsilon" in final else "")
           + (f" contributions={final.get('n_contributions'):.0f}"
              if "n_contributions" in final else ""))
+
+    report = sess.privacy_report()
+    if report is not None:
+        from repro.analysis.report import privacy_spend_table
+        print("\nprivacy spend report (per-silo ledger):")
+        print(privacy_spend_table(report))
+        if args.spend_report:
+            with open(args.spend_report, "w") as f:
+                json.dump(report, f, indent=1)
+            print(f"spend report written to {args.spend_report}")
 
 
 if __name__ == "__main__":

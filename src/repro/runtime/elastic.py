@@ -98,6 +98,9 @@ class SiloMembership:
     cooldown_steps: int = 0  # default for drop() calls without a cooldown
     # silo -> step at which it rejoins (None = until rejoin() is called)
     _out: dict = field(default_factory=dict)
+    # budget-excluded silos: dropped by a PrivacyLedger verdict; never
+    # auto-rejoin and refuse rejoin() without an explicit operator override
+    _excluded: set = field(default_factory=set)
     events: list = field(default_factory=list)
 
     def active_at(self, step: int) -> np.ndarray:
@@ -130,16 +133,53 @@ class SiloMembership:
                             "rejoin_at": self._out[silo]})
         return True
 
-    def drop_one(self, step: int = 0, cooldown: Optional[int] = None) -> Optional[int]:
-        """Drop the highest-index active silo — the placeholder attribution
-        a cluster layer would replace with the actually-straggling host."""
-        for silo in range(self.n_silos - 1, -1, -1):
-            if silo not in self._out:
-                return silo if self.drop(silo, step, cooldown) else None
-        return None
+    def drop_one(self, step: int = 0, cooldown: Optional[int] = None,
+                 telemetry=None) -> Optional[int]:
+        """Drop one active silo on straggler escalation. With per-silo
+        step-time ``telemetry`` (runtime/straggler.SiloTelemetry) the
+        actually-slowest active silo is dropped; without observations the
+        highest-index active silo remains the fallback."""
+        candidates = [s for s in range(self.n_silos) if s not in self._out]
+        if not candidates:
+            return None
+        silo = telemetry.slowest(candidates) if telemetry is not None else None
+        if silo is None:
+            silo = candidates[-1]  # no timing data: highest-index fallback
+        return silo if self.drop(silo, step, cooldown) else None
 
-    def rejoin(self, silo: int, step: int = 0) -> None:
+    def exclude(self, silo: int, step: int = 0, reason: str = "budget") -> bool:
+        """Budget-driven drop (a PrivacyLedger exclusion decision): the silo
+        leaves the active set with no cooldown and no rejoin until an
+        operator override (``rejoin(..., override=True)``). Unlike straggler
+        drops this ignores the quorum — DP forbids the silo's participation
+        outright, so a broken quorum means training must wind down rather
+        than keep spending."""
+        if silo in self._excluded:
+            return True
+        self._excluded.add(silo)
+        self._out[silo] = None  # no auto-rejoin
+        self.events.append({"action": "exclude", "silo": silo, "step": step,
+                            "reason": reason})
+        return True
+
+    @property
+    def excluded(self) -> tuple:
+        return tuple(sorted(self._excluded))
+
+    def rejoin(self, silo: int, step: int = 0, override: bool = False) -> bool:
+        """Return a silo to the active set. Budget-excluded silos refuse to
+        rejoin unless ``override=True`` (the operator decision the ledger's
+        exclusion requires — e.g. after the owner grants a new budget)."""
+        if silo in self._excluded:
+            if not override:
+                self.events.append({"action": "rejoin_refused", "silo": silo,
+                                    "step": step,
+                                    "reason": "budget exclusion needs "
+                                              "operator override"})
+                return False
+            self._excluded.discard(silo)
         if silo in self._out:
             del self._out[silo]
             self.events.append({"action": "rejoin", "silo": silo,
-                                "step": step})
+                                "step": step, "override": override})
+        return True

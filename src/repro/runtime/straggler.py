@@ -16,7 +16,52 @@ this container it records the decision (tested in tests/test_runtime.py).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
+
+
+@dataclass
+class SiloTelemetry:
+    """Per-silo step-time attribution: EMA of each silo's observed step
+    time, so straggler escalations drop the *actually* slow silo instead of
+    the highest-index placeholder.
+
+    Sources, per tier:
+      * wire/protocol tier — the admin times each handler's
+        ``compute_update`` round-trip (real per-party wall time; see
+        api.CollaborativeSession.step);
+      * barrier tier — per-host step times reported by the cluster layer's
+        heartbeat (each host times its own shard; in this single-process
+        container the feed is :meth:`observe` called by whoever has the
+        timing);
+      * fused tiers — all silos share one jitted step, so real per-silo
+        timing doesn't exist; a simulated-latency hook on the Trainer
+        (``silo_latency_hook``) feeds projected per-silo latencies (e.g.
+        from the data-loading layer) for attribution.
+    """
+
+    n_silos: int
+    ema_alpha: float = 0.3  # weight of the newest observation
+    _ema: dict = field(default_factory=dict)  # silo -> EMA step time
+
+    def observe(self, silo: int, step_time_s: float) -> None:
+        prev = self._ema.get(silo)
+        self._ema[silo] = step_time_s if prev is None else \
+            (1.0 - self.ema_alpha) * prev + self.ema_alpha * step_time_s
+
+    def observe_all(self, step_times_s: Sequence[float]) -> None:
+        for silo, t in enumerate(step_times_s):
+            self.observe(silo, float(t))
+
+    def ema(self, silo: int) -> Optional[float]:
+        return self._ema.get(silo)
+
+    def slowest(self, candidates: Sequence[int]) -> Optional[int]:
+        """The slowest silo among ``candidates`` — None when no candidate
+        has an observation yet (caller falls back to its placeholder)."""
+        timed = [s for s in candidates if s in self._ema]
+        if not timed:
+            return None
+        return max(timed, key=lambda s: self._ema[s])
 
 
 @dataclass

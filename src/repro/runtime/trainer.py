@@ -19,10 +19,10 @@ import numpy as np
 
 from repro.checkpoint import checkpointer
 from repro.configs.base import RunConfig
-from repro.core.accountant import PrivacyAccountant
+from repro.core.privacy import PrivacyLedger
 from repro.distributed import steps as steps_mod
 from repro.runtime.elastic import SiloMembership
-from repro.runtime.straggler import StragglerPolicy
+from repro.runtime.straggler import SiloTelemetry, StragglerPolicy
 
 
 @dataclass
@@ -32,9 +32,16 @@ class TrainerConfig:
     checkpoint_dir: Optional[str] = None
     keep_checkpoints: int = 3
     log_every: int = 10
-    # privacy budget stop: halt when epsilon(delta) exceeds this (the paper's
-    # "no further training is allowed by DP" semantics, Fig. 6)
+    # privacy budget stop: halt when the global epsilon(delta) exceeds this
+    # (the paper's "no further training is allowed by DP" semantics, Fig. 6)
     epsilon_budget: Optional[float] = None
+    # per-silo budgets (the ledger's enforcement layer): a uniform per-silo
+    # epsilon, optionally overridden per silo via ``silo_budgets``. A silo
+    # whose own spend reaches its budget is excluded from the participation
+    # set (no rejoin until operator override); training stops once no silo
+    # may contribute
+    silo_epsilon_budget: Optional[float] = None
+    silo_budgets: Optional[dict] = None  # silo index -> epsilon override
     # straggler deadline. When set, every step blocks on the device result so
     # the deadline compares against true step time; when None (adaptive EMA),
     # steps stay fully async and the policy observes the amortized per-step
@@ -63,6 +70,11 @@ class Trainer:
     # deterministic dropout/rejoin scenarios and tests
     membership: Optional[SiloMembership] = None
     silo_schedule: Optional[Callable[[int], Sequence[bool]]] = None
+    # straggler attribution: simulated per-silo latencies on the fused tiers
+    # (step -> (n_silos,) seconds) feeding SiloTelemetry, so escalations drop
+    # the actually-slow silo; on the barrier/wire tiers real per-host timing
+    # feeds ``telemetry.observe`` instead
+    silo_latency_hook: Optional[Callable[[int], Sequence[float]]] = None
     metrics_log: list = field(default_factory=list)
     _preempted: bool = False
     _pending: list = field(default_factory=list)  # on-device metric entries
@@ -71,11 +83,13 @@ class Trainer:
 
     def __post_init__(self):
         priv = self.run_cfg.privacy
-        self.accountant = PrivacyAccountant(
-            sigma=priv.sigma / max(1.0 - priv.noise_lambda, 1e-9),
-            delta=priv.delta, lam=priv.noise_lambda,
-            q=1.0, mode="analytic") if priv.enabled else None
+        self.n_silos = steps_mod.effective_n_silos(self.run_cfg)
+        self.accountant = PrivacyLedger.from_privacy_config(
+            priv, self.n_silos,
+            epsilon_budget=self.tcfg.silo_epsilon_budget,
+            budgets=self.tcfg.silo_budgets) if priv.enabled else None
         self.straggler = StragglerPolicy(self.tcfg.step_deadline_s)
+        self.telemetry = SiloTelemetry(self.n_silos)
         self._owns_mesh = False
         if priv.enabled and priv.sync_path == "barrier" and self.mesh is None:
             # the barrier tier shard_maps over the silo axes; the
@@ -84,31 +98,62 @@ class Trainer:
             from repro.launch.mesh import make_mesh_from_config
             self.mesh = make_mesh_from_config(self.run_cfg.mesh)
             self._owns_mesh = True
-        self.n_silos = steps_mod.effective_n_silos(self.run_cfg)
         if self.tcfg.elastic and self.membership is None:
             self.membership = SiloMembership(
                 self.n_silos, min_active=self.tcfg.elastic_min_active,
                 cooldown_steps=self.tcfg.elastic_cooldown)
+        if self.membership is None and self.accountant is not None \
+                and self.accountant.has_budgets():
+            # per-silo budgets need a membership layer to honor exclusion
+            # decisions even on non-elastic runs
+            self.membership = SiloMembership(self.n_silos)
         if self.tcfg.elastic and self.straggler.on_escalate is None \
                 and self.silo_schedule is None:
-            # escalation drops one silo for the cooldown window (placeholder
-            # attribution; a cluster layer would name the straggling host).
-            # Not wired when a silo_schedule pins the participation set —
-            # the schedule is authoritative and a shadow drop would only
-            # consume quorum without ever taking effect
+            # escalation drops one silo for the cooldown window; per-silo
+            # step-time telemetry names the actually-slow silo (highest-index
+            # fallback when nothing has been observed yet). Not wired when a
+            # silo_schedule pins the participation set — the schedule is
+            # authoritative and a shadow drop would only consume quorum
+            # without ever taking effect
             self.straggler.on_escalate = lambda decision: \
-                self.membership.drop_one(self._step)
+                self.membership.drop_one(self._step,
+                                         telemetry=self.telemetry)
+        # budgets (like elastic mode) can shrink the participation set, so
+        # the build-time validation must fire for them too — the barrier
+        # tier's perleaf mask family would silently discard a partial set
+        # (aggregating an excluded silo the ledger stops charging)
+        partial_sets = self.tcfg.elastic or self.silo_schedule is not None \
+            or (self.accountant is not None and self.accountant.has_budgets())
         self.train_step = steps_mod.build_train_step(
             self.model, self.run_cfg, abstract_mesh=self.mesh,
-            elastic=self.tcfg.elastic)
+            elastic=partial_sets)
         self._jit_step = jax.jit(self.train_step, donate_argnums=(0,))
 
     def _active_for(self, step: int) -> np.ndarray:
         if self.silo_schedule is not None:
-            return np.asarray(self.silo_schedule(step), bool)
-        if self.membership is not None:
-            return self.membership.active_at(step)
-        return np.ones(self.n_silos, bool)
+            active = np.asarray(self.silo_schedule(step), bool)
+        elif self.membership is not None:
+            active = self.membership.active_at(step)
+        else:
+            active = np.ones(self.n_silos, bool)
+        if self.accountant is not None and self.accountant.has_budgets():
+            # budget verdicts override every membership source — a silo with
+            # no budget left may not contribute even if scheduled
+            active = active & self.accountant.allowed_mask()
+        return active
+
+    def _enforce_budgets(self, step: int) -> None:
+        """Turn the ledger's fresh exclusion decisions into membership drops
+        (budget-driven: no cooldown, no rejoin until operator override)."""
+        if self.accountant is None:
+            return
+        for silo in self.accountant.take_exclusions():
+            if self.membership is not None:
+                self.membership.exclude(silo, step=step, reason="budget")
+
+    def spend_report(self) -> Optional[dict]:
+        """The ledger's admin-plane spend report (None without privacy)."""
+        return self.accountant.spend_report() if self.accountant else None
 
     # -- preemption --------------------------------------------------------
     def install_preemption_handler(self):
@@ -179,7 +224,41 @@ class Trainer:
             state = restored._replace(noise_state=restored.noise_state._replace(
                 prev_active=jnp.ones((self.n_silos,), jnp.bool_)))
         if self.accountant and extra.get("accountant"):
-            self.accountant = PrivacyAccountant.from_state_dict(extra["accountant"])
+            # restores both ledger state dicts and pre-refactor scalar
+            # PrivacyAccountant dicts (legacy -> all-silos-identical ledger);
+            # the operator's configured budgets stay authoritative
+            restored_ledger = PrivacyLedger.from_state_dict(
+                extra["accountant"], n_silos=self.n_silos)
+            # operator-configured budgets win when given; otherwise the
+            # checkpointed budgets keep enforcing across the restart
+            if self.tcfg.silo_epsilon_budget is not None:
+                restored_ledger.epsilon_budget = self.tcfg.silo_epsilon_budget
+            if self.tcfg.silo_budgets:
+                restored_ledger.budgets = dict(self.tcfg.silo_budgets)
+            self.accountant = restored_ledger
+            if self.membership is None and restored_ledger.has_budgets():
+                # budgets carried only by the checkpoint still need a
+                # membership layer to record exclusion decisions
+                self.membership = SiloMembership(self.n_silos)
+            priv = self.run_cfg.privacy
+            if restored_ledger.has_budgets() and priv.enabled \
+                    and priv.sync_path == "barrier":
+                # the build-time guard couldn't see checkpoint-carried
+                # budgets; a perleaf barrier step would silently aggregate
+                # the full ring while the ledger stops charging excluded
+                # silos (privacy under-accounting)
+                from repro.core import dp_pipeline
+                if dp_pipeline.resolve_policy("packed", 1).mode == "perleaf":
+                    raise ValueError(
+                        "checkpoint carries per-silo budgets but the barrier "
+                        "tier resolved the perleaf mask family, which only "
+                        "builds the full static ring; lift the "
+                        "dp_noise_tree=perleaf override to enforce budgets")
+            if self.membership is not None:
+                # re-apply standing exclusion decisions (the pending queue is
+                # not persisted; what matters is who is exhausted *now*)
+                for silo in self.accountant.exhausted():
+                    self.membership.exclude(silo, step=step, reason="budget")
         if self.batch_state is not None and extra.get("batch_state"):
             self.batch_state.load_state_dict(extra["batch_state"])
         if extra.get("metrics_log"):
@@ -207,11 +286,19 @@ class Trainer:
                     and self.accountant.epsilon() >= self.tcfg.epsilon_budget):
                 break  # privacy budget exhausted: DP forbids further training
 
+            active = self._active_for(step)
+            if not active.any():
+                # every silo is out (budgets spent or membership empty):
+                # there is nothing DP allows to aggregate
+                break
+
             batch = self.next_batch()
             if self._window_t0 is None:
                 self._window_t0 = time.time()
             self._step = step
-            active = self._active_for(step)
+            if self.silo_latency_hook is not None:
+                # fused tiers: simulated per-silo latencies for attribution
+                self.telemetry.observe_all(self.silo_latency_hook(step))
             t0 = time.time()
             state, metrics = self._jit_step(state, batch, root_key,
                                             jnp.asarray(active))
@@ -231,8 +318,12 @@ class Trainer:
                 self.straggler.observe(dt, update_baseline=False)
             entry = {"step": step, **metrics, "step_time_s": dt}
             if self.accountant:
-                self.accountant.step(contributions=int(active.sum()))
+                # per-step participation bitmask: the ledger attributes this
+                # step's privacy loss to exactly the silos that contributed
+                self.accountant.record(active)
                 entry["epsilon"] = self.accountant.epsilon()
+                entry["epsilon_per_silo"] = self.accountant.epsilon_per_silo()
+                self._enforce_budgets(step + 1)
             self._pending.append(entry)
             step += 1
             if len(self._pending) >= max(self.tcfg.metrics_flush_every, 1):

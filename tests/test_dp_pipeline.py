@@ -445,6 +445,99 @@ def test_collaborative_session_dropout_and_rejoin():
     assert sess.epsilon() > 0.0
 
 
+def test_admin_mask_mode_parity_wire_vs_fused():
+    """mask_mode='admin' (the paper-faithful O(n*P) construction) through
+    the same DPPipeline stages: wire-tier contribution sum == fused central
+    aggregate == sum of clipped grads + xi_t - lam*xi_{t-1}, for full and
+    partial participation sets."""
+    import dataclasses
+
+    from repro.core import clipping, masking
+
+    model, priv, params, batch, keys = setup(lam=0.7)
+    priv = dataclasses.replace(priv, mask_mode="admin")
+    layout = flatbuf.layout_of(params)
+    pipe = DPPipeline(priv, layout, N)
+    ns = NoiseState(prev_key=jnp.array([7, 8], jnp.uint32),
+                    has_prev=jnp.ones((), jnp.bool_),
+                    prev_active=jnp.ones((N,), jnp.bool_))
+    sigma_c = priv.sigma * 1.0
+
+    for active_np in (np.ones(N, bool), np.array([True, False, True, True])):
+        active = jnp.asarray(active_np)
+        contribs = []
+        for i in range(N):
+            if not active_np[i]:
+                continue
+            sl = {k: v[i * 8:(i + 1) * 8] for k, v in batch.items()}
+            g = jax.grad(model.loss)(params, sl)
+            scale = pipe.clip_scale(pipe.norm_tree(g), 1.0)
+            contribs.append(pipe.finalize(pipe.silo_contribution(
+                g, i, scale, active, keys, ns, 1.0)))
+        wire = reduce_contributions(contribs)
+
+        fused, _, _, _, _ = steps_mod._fused_grads(
+            model, priv, params, batch, N, keys, ns, jnp.float32(1.0),
+            keys.key_clip, active=active)
+
+        manual = None
+        for i in range(N):
+            if not active_np[i]:
+                continue
+            sl = {k: v[i * 8:(i + 1) * 8] for k, v in batch.items()}
+            g = jax.grad(model.loss)(params, sl)
+            g, _ = clipping.clip_tree(g, 1.0)
+            manual = g if manual is None else jax.tree.map(
+                lambda a, b: a + b, manual, g)
+        xi = masking.admin_xi(jax.random.wrap_key_data(keys.key_xi), params,
+                              sigma_c)
+        xp = masking.admin_xi(jax.random.wrap_key_data(ns.prev_key), params,
+                              sigma_c)
+        manual = jax.tree.map(lambda m, a, b: m + a - 0.7 * b, manual, xi, xp)
+
+        assert max_err(wire, fused) < 2e-4, active_np
+        assert max_err(fused, manual) < 2e-4, active_np
+
+
+def test_admin_mask_row_matches_stacked_set():
+    """A handler reconstructing only its own row must get exactly the row of
+    the admin's distributed set — same streams in every case, including the
+    default all-active/no-correction one."""
+    from repro.core import masking
+
+    t = {"w": jnp.zeros((4096,), jnp.float32), "b": jnp.zeros((64,))}
+    key = jax.random.PRNGKey(7)
+    cases = [dict(active=None, correction=None),
+             dict(active=np.array([True, False, True]), correction=None),
+             dict(active=np.array([True, True, True]),
+                  correction=jax.tree.map(lambda x: x + 0.25, t))]
+    for kw in cases:
+        masks = masking.admin_masks(key, t, 3, 1.5, 8.0, **kw)
+        for i in range(3):
+            row = masking.admin_mask_row(key, t, 3, i, 1.5, 8.0, **kw)
+            for k in t:
+                np.testing.assert_array_equal(np.asarray(row[k]),
+                                              np.asarray(masks[k][i]), err_msg=f"{kw} silo {i} leaf {k}")
+
+
+def test_admin_masks_telescope_over_partial_active_set():
+    """Each silo's admin mask is wide-spread noise (property 2), rows of
+    dropped silos are zero, and the active rows sum to exactly the xi (+
+    correction) the central tier regenerates."""
+    from repro.core import masking
+
+    t = {"w": jnp.zeros((8192,), jnp.float32)}
+    key = jax.random.PRNGKey(3)
+    active = jnp.array([True, False, True, True])
+    masks = masking.admin_masks(key, t, 4, 2.0, 16.0, active=active)
+    m = np.asarray(masks["w"])
+    assert np.all(m[1] == 0.0)  # dropped silo ships no mask
+    assert m[0].std() > 10.0  # wide-spread vs sigma_c=2
+    total = m[0] + m[2] + m[3]
+    xi = np.asarray(masking.admin_xi(key, t, 2.0)["w"])
+    np.testing.assert_allclose(total, xi, atol=1e-3)
+
+
 def test_barrier_tier_pins_silo_count_to_mesh():
     """priv.n_silos must not leak into the barrier tier: the shard_map psum
     runs over the mesh's silo slots, so participation set, noise streams and

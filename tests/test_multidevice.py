@@ -120,7 +120,19 @@ print("OK")
            "(pod,data,model) mesh tries an invalid manual<->auto reshard; "
            "SIGABRT in the subprocess). Tracked since PR 1; the barrier "
            "tier's numerics are covered on a pure silo mesh by "
-           "tests/test_dp_pipeline.py::test_barrier_tier_parity_on_mesh.",
+           "tests/test_dp_pipeline.py::test_barrier_tier_parity_on_mesh. "
+           "Retried in PR 4 — not fixable from Python on jax 0.4.37: "
+           "(1) explicit in/out_shardings on the enclosing jit (state_pspecs"
+           "/batch_pspec named shardings) hit the identical CHECK at "
+           "spmd_partitioner.cc:517 — the bad reshard is on an internal "
+           "rank-3 stacked-param tensor, not a jit boundary value; "
+           "(2) jax_use_shardy_partitioner=True fails earlier (UNIMPLEMENTED:"
+           " PartitionId under SPMD partitioning); (3) with_sharding_"
+           "constraint(model-axis specs) inside the shard_map body is "
+           "emitted without the manual subgroup annotation on 0.4.37 and "
+           "trips 'Incompatible manual sharding' (RET_CHECK spmd_partitioner"
+           ".cc:2468). Needs a jax/XLA upgrade (modern shard_map composes "
+           "manual axes into in-body constraints).",
     strict=False)
 def test_barrier_path_exact_on_mesh():
     out = run_script(BARRIER_SCRIPT)

@@ -1,4 +1,5 @@
-"""Straggler policy, data pipeline determinism, compression error feedback."""
+"""Straggler policy, per-silo attribution telemetry, data pipeline
+determinism, compression error feedback."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,7 +7,71 @@ import numpy as np
 from repro.data.pipeline import FederatedBatcher, SiloIterator
 from repro.data.synthetic import ArrayDataset, synthetic_mnist, synthetic_tokens
 from repro.distributed import compression
-from repro.runtime.straggler import StragglerPolicy
+from repro.runtime.straggler import SiloTelemetry, StragglerPolicy
+
+
+def test_telemetry_attributes_slowest_silo():
+    t = SiloTelemetry(4)
+    assert t.slowest([0, 1, 2, 3]) is None  # nothing observed yet
+    t.observe_all([0.1, 0.1, 0.9, 0.1])
+    assert t.slowest([0, 1, 2, 3]) == 2
+    assert t.slowest([0, 1, 3]) == 0  # ties resolve to the first candidate
+    # EMA: a recovered silo stops being the attribution target
+    for _ in range(20):
+        t.observe(2, 0.1)
+        t.observe(3, 0.8)
+    assert t.slowest([0, 1, 2, 3]) == 3
+
+
+def test_drop_one_uses_telemetry_attribution():
+    """Escalation drops the actually-slow silo, not the highest index."""
+    from repro.runtime.elastic import SiloMembership
+
+    t = SiloTelemetry(4)
+    t.observe_all([0.1, 0.9, 0.1, 0.1])
+    m = SiloMembership(4)
+    assert m.drop_one(step=0, telemetry=t) == 1  # silo 1 is the straggler
+    np.testing.assert_array_equal(m.active_at(0), [1, 0, 1, 1])
+    # next escalation: slowest among the remaining candidates
+    t.observe(2, 2.0)
+    assert m.drop_one(step=1, telemetry=t) == 2
+    # and without telemetry data the placeholder fallback remains
+    m2 = SiloMembership(4)
+    assert m2.drop_one(step=0, telemetry=SiloTelemetry(4)) == 3
+
+
+def test_trainer_escalation_drops_slowest_silo():
+    """End to end: a latency hook feeds per-silo timings; when the policy
+    escalates, the trainer's membership drops the attributed silo."""
+    from repro.configs.base import (MeshConfig, OptimizerConfig,
+                                    PrivacyConfig, RunConfig, SHAPES)
+    from repro.configs.paper_models import MNIST_MLP3
+    from repro.models.registry import Model
+    from repro.models.small import build_small_model
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    sm = build_small_model(MNIST_MLP3)
+    model = Model(cfg=None, init=sm.init, loss=sm.loss, init_cache=None,
+                  prefill=None, decode_step=None)
+    rc = RunConfig(model=None, shape=SHAPES["train_4k"],
+                   mesh=MeshConfig((1,), ("data",)),
+                   privacy=PrivacyConfig(enabled=True, sigma=0.05,
+                                         clip_bound=1.0, n_silos=4),
+                   optimizer=OptimizerConfig(name="sgd", lr=0.1))
+    train, _ = synthetic_mnist(n_train=256, n_test=16)
+    fb = FederatedBatcher(train.split(4), per_silo_batch=8)
+    tcfg = TrainerConfig(total_steps=2, log_every=0, step_deadline_s=30.0,
+                         elastic=True, elastic_cooldown=5)
+    tr = Trainer(model, rc, tcfg,
+                 lambda: {k: jnp.asarray(v) for k, v in fb.next().items()},
+                 silo_latency_hook=lambda step: [0.1, 0.1, 0.7, 0.1])
+    tr.telemetry.observe_all([0.1, 0.1, 0.7, 0.1])  # hook's first feed
+    for _ in range(tr.straggler.escalate_after):
+        tr.straggler.observe(1e9)
+    assert 2 not in [s for s in range(4)
+                     if tr.membership.active_at(0)[s]]  # silo 2 dropped
+    drop_events = [e for e in tr.membership.events if e["action"] == "drop"]
+    assert drop_events and drop_events[0]["silo"] == 2
 
 
 def test_straggler_flags_and_escalates():
