@@ -30,6 +30,26 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def timeit_interleaved(fns_args: list, warmup: int = 2,
+                       iters: int = 9) -> list:
+    """Median wall time per call (us) for several functions measured
+    round-robin: one call of each per sweep, so close variants of one graph
+    see identical machine conditions. Separate ``timeit`` calls sit minutes
+    apart in a full run, and host scheduling noise between them can dwarf
+    the effect being compared."""
+    assert warmup >= 1, "warmup must run at least once to exclude compile"
+    for fn, args in fns_args:
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+    times = [[] for _ in fns_args]
+    for _ in range(iters):
+        for slot, (fn, args) in zip(times, fns_args):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            slot.append(time.perf_counter() - t0)
+    return [sorted(ts)[len(ts) // 2] * 1e6 for ts in times]
+
+
 def emit(name: str, us: float, derived: str = "", impl: str = "",
          shape: str = "") -> None:
     RECORDS.append({"name": name, "us_per_call": round(us, 3), "impl": impl,

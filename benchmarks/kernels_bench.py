@@ -18,7 +18,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, timeit, timeit_interleaved
 from repro.core import masking
 from repro.kernels import available_impls
 from repro.kernels.dp_clip import ops as dops
@@ -146,23 +146,22 @@ def run():
                                                       nstate, 1.0)
             return flatbuf.unpack(lay, noisy, dtype=jnp.float32)
 
-        emit(f"kernels/dp_pipeline_perleaf_l{n_leaves}",
-             timeit(jax.jit(pipeline_perleaf), tree), impl="perleaf",
-             shape=shape)
-        emit(f"kernels/dp_pipeline_packed_l{n_leaves}",
-             timeit(jax.jit(pipeline_packed), tree), impl="packed",
-             shape=shape)
-
         # elastic path: the same engine run with a per-step participation set
         # (active-ring masks, per-stream sqrt(k) renormalization, active-set
-        # divisor) vs the static all-active run above — tracks the overhead
-        # of elastic silo membership on the hot path
+        # divisor) vs the static all-active fast path (active is a
+        # trace-time constant, so the engine skips the gating/ring work) —
+        # the row pair tracks the overhead of elastic silo membership on the
+        # hot path, and that it is paid only when membership is actually
+        # dynamic. The four dp_pipeline rows are measured interleaved: they
+        # compare close variants of one graph, and host scheduling noise
+        # between separate timeit calls would dwarf the effect.
         from repro.core.dp_pipeline import DPPipeline
 
         n_silos = B
         silo_layout = flatbuf.layout_of({k: v[0] for k, v in tree.items()})
         pipe = DPPipeline(priv, silo_layout, n_silos)
         active_drop = jnp.ones((n_silos,), jnp.bool_).at[1].set(False)
+        active_full = jnp.ones((n_silos,), jnp.bool_)
 
         def pipeline_active(t, active):
             stacked = jax.vmap(
@@ -172,9 +171,20 @@ def run():
                 keys.key_clip, active)
             return noisy
 
-        emit(f"kernels/dp_pipeline_active_set_l{n_leaves}",
-             timeit(jax.jit(pipeline_active), tree, active_drop),
+        us = timeit_interleaved([
+            (jax.jit(pipeline_perleaf), (tree,)),
+            (jax.jit(pipeline_packed), (tree,)),
+            (jax.jit(pipeline_active), (tree, active_drop)),
+            (jax.jit(lambda t: pipeline_active(t, active_full)), (tree,)),
+        ])
+        emit(f"kernels/dp_pipeline_perleaf_l{n_leaves}", us[0],
+             impl="perleaf", shape=shape)
+        emit(f"kernels/dp_pipeline_packed_l{n_leaves}", us[1],
+             impl="packed", shape=shape)
+        emit(f"kernels/dp_pipeline_active_set_l{n_leaves}", us[2],
              impl="packed", shape=shape + f",k={n_silos - 1}/{n_silos}")
+        emit(f"kernels/dp_pipeline_active_static_l{n_leaves}", us[3],
+             impl="packed", shape=shape + f",k={n_silos}/{n_silos} (static)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,171 @@
+"""Wire-tier round benchmark: {pickle vs packed codec} x {serial vs
+pipelined rounds} x payload sizes, on the full component protocol
+(attestation, KDS, sealed channels, sandboxed grad code, DP masking).
+
+Measures per-round latency and bytes-on-wire, and emits ``BENCH_wire.json``
+next to ``BENCH_kernels.json``:
+
+* ``us_per_round`` — wall time per protocol round (median over the timed
+  rounds, compile/warmup excluded).
+* ``down_bytes_per_round`` — params distribution. The packed codec
+  broadcasts one XOR delta per round (a broadcast medium carries it once);
+  the pickle baseline unicasts the full pytree blob to every active handler
+  — the seed's behaviour.
+* ``up_bytes_per_round`` — the handlers' sealed masked updates. These are
+  fresh full-entropy fp32 buffers every round (DP masks), so their size is
+  irreducible; codec choice only changes framing.
+
+The 'pickle' configuration is the seed wire stack end to end: pickle+npz
+pytree blobs AND the per-block SHA-256 keystream with per-byte Python XOR
+(``SecureChannel(version=VER_LEGACY)``). The 'packed' configuration is the
+flat-buffer codec + vectorized channel crypto.
+
+``--check`` (CI smoke) fails the run unless, at every payload, the packed
+codec is strictly faster than the pickle codec on the same payload and the
+delta broadcast cuts params-distribution bytes by >= 2x.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import CollaborativeSession
+from repro.configs.base import PrivacyConfig
+
+N_SILOS = 4
+# name -> (n_leaves, elems_per_leaf); payload = n_leaves * elems fp32 params
+PAYLOADS = {
+    "p64k": (16, 4096),      # ~256 KB of params
+    "p512k": (64, 8192),     # ~2 MB
+    "p2m": (128, 16384),     # ~8 MB
+}
+
+
+def make_params(n_leaves: int, elem: int) -> dict:
+    ks = jax.random.split(jax.random.PRNGKey(0), n_leaves)
+    return {f"w{i}": jax.random.normal(ks[i], (elem,), jnp.float32) * 0.02
+            for i in range(n_leaves)}
+
+
+def _loss(p):
+    """Cheap quadratic loss touching every parameter (the benchmark targets
+    protocol overhead, not model math)."""
+    return 5e-5 * sum(jnp.vdot(x, x) for x in jax.tree.leaves(p))
+
+
+_grad = jax.jit(jax.value_and_grad(_loss))
+
+
+def grad_fn(params, data):
+    return _grad(params)
+
+
+def update_fn(params, update, lr):
+    return jax.tree.map(lambda p, u: p - lr * u.astype(p.dtype),
+                        params, update)
+
+
+def bench_config(params, codec: str, pipelined: bool, rounds: int) -> dict:
+    priv = PrivacyConfig(enabled=True, sigma=0.5, clip_bound=1.0,
+                         mask_scale=8.0)
+    silo_data = [{"x": jnp.ones((1,), jnp.float32)} for _ in range(N_SILOS)]
+    sess = CollaborativeSession.from_silos(silo_data, priv, codec=codec,
+                                           params_template=params)
+    # warmup round: jit compile of the grad/mask path, channel setup
+    p, _ = sess.run(params, grad_fn, update_fn, lr=0.01, n_rounds=1,
+                    pipelined=pipelined)
+    before = dict(sess.wire_stats)
+    t0 = time.perf_counter()
+    p, losses = sess.run(p, grad_fn, update_fn, lr=0.01, n_rounds=rounds,
+                         pipelined=pipelined)
+    dt = time.perf_counter() - t0
+    after = sess.wire_stats
+    down = (after["broadcast_bytes"] + after["resync_bytes"]
+            - before["broadcast_bytes"] - before["resync_bytes"]) / rounds
+    up = (after["update_bytes"] - before["update_bytes"]) / rounds
+    return {"us_per_round": round(dt / rounds * 1e6, 1),
+            "down_bytes_per_round": int(down),
+            "up_bytes_per_round": int(up),
+            "total_bytes_per_round": int(down + up)}
+
+
+def run(payloads: dict, rounds: int) -> dict:
+    results = {}
+    for pname, (n_leaves, elem) in payloads.items():
+        params = make_params(n_leaves, elem)
+        jax.block_until_ready(_grad(params))  # compile outside the sandbox
+        n_params = n_leaves * elem
+        for codec in ("pickle", "packed"):
+            for sched in ("serial", "pipelined"):
+                row = bench_config(params, codec, sched == "pipelined",
+                                   rounds)
+                row.update({"codec": codec, "sched": sched,
+                            "n_silos": N_SILOS, "payload_floats": n_params,
+                            "shape": f"leaves={n_leaves},elem={elem}"})
+                name = f"wire/round_{codec}_{sched}_{pname}"
+                results[name] = row
+                print(f"{name},{row['us_per_round']:.1f},"
+                      f"down={row['down_bytes_per_round']},"
+                      f"up={row['up_bytes_per_round']}")
+    return results
+
+
+def check(results: dict, payloads: dict) -> list:
+    """CI gate: packed strictly faster than pickle on the same payload +
+    schedule, and the delta broadcast cuts params-distribution bytes >=2x."""
+    failures = []
+    for pname in payloads:
+        for sched in ("serial", "pipelined"):
+            pick = results[f"wire/round_pickle_{sched}_{pname}"]
+            pack = results[f"wire/round_packed_{sched}_{pname}"]
+            if not pack["us_per_round"] < pick["us_per_round"]:
+                failures.append(
+                    f"{pname}/{sched}: packed {pack['us_per_round']}us not "
+                    f"strictly faster than pickle {pick['us_per_round']}us")
+            if not pack["down_bytes_per_round"] * 2 \
+                    <= pick["down_bytes_per_round"]:
+                failures.append(
+                    f"{pname}/{sched}: delta broadcast "
+                    f"{pack['down_bytes_per_round']}B not >=2x under pickle "
+                    f"params distribution {pick['down_bytes_per_round']}B")
+        serial = results[f"wire/round_pickle_serial_{pname}"]
+        best = results[f"wire/round_packed_pipelined_{pname}"]
+        print(f"{pname}: packed+pipelined vs pickle+serial speedup "
+              f"{serial['us_per_round'] / best['us_per_round']:.2f}x, "
+              f"down-bytes reduction "
+              f"{serial['down_bytes_per_round'] / max(best['down_bytes_per_round'], 1):.2f}x, "
+              f"total-bytes reduction "
+              f"{serial['total_bytes_per_round'] / max(best['total_bytes_per_round'], 1):.2f}x")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="CI smoke: two smaller payloads, fewer rounds")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless packed beats pickle on every payload")
+    ap.add_argument("--out", default="BENCH_wire.json")
+    args = ap.parse_args()
+
+    payloads = {k: PAYLOADS[k] for k in (("p64k", "p512k") if args.small
+                                         else PAYLOADS)}
+    rounds = args.rounds or (2 if args.small else 3)
+    results = run(payloads, rounds)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"# wrote {args.out} ({len(results)} entries)")
+    failures = check(results, payloads)
+    if args.check and failures:
+        raise SystemExit("wire-bench check FAILED:\n  " +
+                         "\n  ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

@@ -67,9 +67,22 @@ print(f"\nlast wire update: std={w.std():.2f} (raw clipped grad scale ~1e-3) "
 print(f"privacy spent after {STEPS} steps: eps={sess.epsilon():.3f} "
       f"(delta=1e-5)")
 
+# pipelined rounds: the updater ingests each sealed update as it arrives
+# (decrypt+accumulate overlaps the next handler's compute) while the admin
+# fans out the next round's keys — bit-identical to the serial loop above
+params, losses = sess.run(params, grad_fn, update_fn, lr=0.5, n_rounds=10,
+                          pipelined=True)
+print(f"\n10 pipelined rounds: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+stats = sess.wire_stats
+print(f"bytes on wire per round: broadcast {stats['broadcast_bytes'] // stats['rounds']:,} "
+      f"(XOR delta, sent once) + updates {stats['update_bytes'] // stats['rounds']:,}")
+
 # the admin plane: per-silo spend over each owner's own participation
-# history (a silo that sat out steps spent less epsilon)
+# history (a silo that sat out steps spent less epsilon). The report is
+# HMAC-signed with a key derived from the admin's attestation identity —
+# owners can audit spend without trusting the training driver.
 from repro.analysis.report import privacy_spend_table  # noqa: E402
 
 print("\nper-silo spend report (the ledger the admin surfaces to owners):")
-print(privacy_spend_table(sess.privacy_report()))
+print(privacy_spend_table(sess.privacy_report(),
+                          attestation=sess.service.attestation))

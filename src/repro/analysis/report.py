@@ -18,9 +18,52 @@ def _eps(x) -> str:
     return "inf" if x is None else f"{x:.4f}"
 
 
-def privacy_spend_table(report: dict) -> str:
+def verify_spend_report(report: dict, attestation, *, component: str = "admin",
+                        expected_measurement: str = None) -> bool:
+    """Verify a ledger-signed spend report (``Admin.sign_spend_report``).
+
+    Two checks, both required. (1) The MAC: the signing key is derived from
+    the hardware-root signature over the signer's attestation report, which
+    is *not* carried in the JSON — the verifier recomputes it through
+    ``attestation`` (the root of trust) from the embedded identity claim,
+    so re-signing a tampered body requires the attestation root key.
+    (2) The identity: the claimed signer must be the component the owners
+    trust — its name must match ``component`` and, when
+    ``expected_measurement`` is given (the service's
+    ``expected_measurement()``), its measured code+config hash too. Without
+    (2), *any* attested party (e.g. a data handler) could re-sign a
+    tampered body under its own identity. Returns False for
+    missing/invalid signatures or mismatched signers."""
+    import hmac as hmac_mod
+
+    from repro.core.tee.channels import spend_report_mac
+
+    sig = report.get("signature")
+    if not isinstance(sig, dict) or "hmac" not in sig or "signer" not in sig:
+        return False
+    signer = sig["signer"]
+    try:
+        if signer["component"] != component:
+            return False
+        if expected_measurement is not None \
+                and signer["code_measurement"] != expected_measurement:
+            return False
+        att = attestation.issue(signer["component"],
+                                signer["code_measurement"],
+                                signer["policy_hash"], signer["nonce"])
+    except (KeyError, TypeError):
+        return False
+    body = {k: v for k, v in report.items() if k != "signature"}
+    expect = spend_report_mac(body, att.signature)
+    return hmac_mod.compare_digest(expect, sig["hmac"])
+
+
+def privacy_spend_table(report: dict, attestation=None) -> str:
     """Markdown table for one :meth:`PrivacyLedger.spend_report` dict: one
-    row per silo with its own participation history, spend and verdict."""
+    row per silo with its own participation history, spend and verdict.
+    With ``attestation`` (the session's attestation service), a ledger
+    signature is verified and its status rendered; without it the signature
+    is only surfaced (verification needs the root of trust)."""
     lines = [
         f"mode={report['mode']} sigma={report['sigma']:.4g} "
         f"delta={report['delta']:.1e} lam={report['lam']:.2f} "
@@ -42,6 +85,17 @@ def privacy_spend_table(report: dict) -> str:
         lines.append(f"silo {e['silo']} excluded at step {e['step']} "
                      f"(eps {_eps(e['epsilon'])} >= budget "
                      f"{_eps(e['budget'])})")
+    sig = report.get("signature")
+    if sig is not None:
+        signer = sig.get("signer", {})
+        status = "present" if attestation is None else \
+            ("VERIFIED" if verify_spend_report(report, attestation)
+             else "INVALID")
+        lines.append(
+            f"signature: {status} — {sig.get('scheme')} by "
+            f"{signer.get('component', '?')} "
+            f"(measurement {signer.get('code_measurement', '')[:12]}…); "
+            f"verify with verify_spend_report(report, attestation_service)")
     return "\n".join(lines)
 
 

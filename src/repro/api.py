@@ -293,18 +293,44 @@ class CollaborativeSession:
     clip_bound: float = 1.0
     membership: Any = None
     telemetry: Any = None  # per-party step-time attribution
+    codec: str = "packed"  # wire codec: packed flat buffers | legacy pickle
+    # delta-broadcast state: the packed buffer of the last broadcast params
+    # and the broadcast epoch (handlers resync on epoch gaps)
+    _bcast_buf: Any = None
+    _bcast_layout: Any = None
+    _bcast_epoch: int = 0
+    wire_stats: Any = None  # per-session bytes-on-wire counters
+
+    def __post_init__(self):
+        if self.wire_stats is None:
+            self.wire_stats = {"rounds": 0, "broadcast_bytes": 0,
+                               "resync_bytes": 0, "update_bytes": 0}
 
     @classmethod
     def from_silos(cls, silo_data: list, privacy: PrivacyConfig, *,
                    session_id: str = "session", root_seed: int = 0,
                    silo_epsilon_budget: Optional[float] = None,
-                   silo_budgets: Optional[dict] = None) -> "CollaborativeSession":
+                   silo_budgets: Optional[dict] = None,
+                   codec: str = "packed",
+                   params_template=None) -> "CollaborativeSession":
         """``silo_data``: one batch dict per dataset owner (stays silo-local).
         ``silo_epsilon_budget``/``silo_budgets`` arm per-owner budget
         enforcement; the ledger config joins the attestation measurement, so
-        components only get keys for the enforcement terms the owners saw."""
+        components only get keys for the enforcement terms the owners saw.
+
+        ``codec`` selects the wire stack: ``'packed'`` (default) moves every
+        round through the flat-buffer codec (raw ``(P,)`` memoryviews,
+        XOR-delta params broadcast, vectorized channel crypto);
+        ``'pickle'`` keeps the seed's pickle+npz blobs and per-block channel
+        crypto — the benchmark baseline. ``params_template`` (a params
+        pytree) pins the session's packed-layout fingerprint into the wire
+        config, and therefore into every component's attestation
+        measurement: a component speaking a different layout gets no keys."""
+        from repro.core import flatbuf
         from repro.core.privacy import PrivacyLedger
-        from repro.core.tee.channels import SecureChannel, derive_key
+        from repro.core.tee import wire
+        from repro.core.tee.channels import (SecureChannel, VER_FAST,
+                                             VER_LEGACY, derive_key)
         from repro.core.tee.components import (Admin, DataHandler,
                                                ManagementService, ModelUpdater)
         from repro.runtime.elastic import SiloMembership
@@ -315,25 +341,35 @@ class CollaborativeSession:
             privacy, n, epsilon_budget=silo_epsilon_budget,
             budgets=silo_budgets)
         svc = ManagementService()
+        wire_config = {"codec": wire.WIRE_CODEC_ID if codec == "packed"
+                       else "pickle-npz-v0"}
+        if params_template is not None and codec == "packed":
+            wire_config["layout"] = wire.layout_fingerprint(
+                flatbuf.layout_of(params_template)).hex()
         svc.create_session(session_id, n, privacy,
-                           ledger_config=ledger.config_dict())
+                           ledger_config=ledger.config_dict(),
+                           wire_config=wire_config)
+        chan_ver = VER_FAST if codec == "packed" else VER_LEGACY
         handlers = []
         for i, data in enumerate(silo_data):
-            h = DataHandler(f"handler-{i}", svc, silo_idx=i, data=data)
+            h = DataHandler(f"handler-{i}", svc, silo_idx=i, data=data,
+                            codec=codec)
             h.attest(svc.policy)
             svc.kds.upload_key(f"dk-{i}", derive_key(b"session-root", f"dk-{i}"),
                                f"owner-{i}", svc.expected_measurement(),
                                svc.policy.hash())
             key = svc.kds.request_key(f"dk-{i}", h.report)  # released: attested OK
-            h.channel = SecureChannel(key, h.name)
+            h.channel = SecureChannel(key, h.name, version=chan_ver)
             handlers.append(h)
         updater = ModelUpdater("updater", svc)
         for h in handlers:
             updater.channels[h.name] = SecureChannel(
-                svc.kds._records[f"dk-{h.silo_idx}"].key, h.name)
+                svc.kds._records[f"dk-{h.silo_idx}"].key, h.name,
+                version=chan_ver)
 
         admin = Admin("admin", svc, root_key=jax.random.PRNGKey(root_seed),
                       n_silos=n, ledger=ledger)
+        admin.attest(svc.policy)  # signs spend reports with this identity
         for h in handlers:
             # handlers trust the attested admin for budget verdicts — the
             # training driver can't fabricate an all-allowed vector
@@ -342,7 +378,7 @@ class CollaborativeSession:
                    updater=updater, admin=admin, accountant=ledger,
                    n_silos=n, clip_bound=privacy.clip_bound,
                    membership=SiloMembership(n),
-                   telemetry=SiloTelemetry(n))
+                   telemetry=SiloTelemetry(n), codec=codec)
 
     def drop_silo(self, silo: int, step: Optional[int] = None,
                   cooldown: Optional[int] = None) -> bool:
@@ -373,6 +409,104 @@ class CollaborativeSession:
     def _next_round(self) -> int:
         return self.accountant.steps
 
+    # ------------------------------------------------------------- wire plane
+    def _admin_plane(self, step_idx: int) -> dict:
+        """Round-(t) admin fanout: step keys, budget verdicts, budget-driven
+        membership exclusions, the resolved participation set and the
+        noise-correction state — everything the handlers need before they
+        can compute. Factored out so :meth:`run` can overlap round t+1's
+        fanout with round t's aggregation."""
+        keys = self.admin.keys_for_step(step_idx)
+        verdicts = self.admin.verdicts()
+        for silo in self.accountant.take_exclusions():
+            # budget-driven membership drop: no rejoin without override
+            self.membership.exclude(silo, step=step_idx, reason="budget")
+        active = self.membership.active_at(step_idx) & verdicts
+        return {"step": step_idx, "keys": keys, "verdicts": verdicts,
+                "active": active, "noise_state": self.admin.state_for_step()}
+
+    def _params_broadcast(self, params):
+        """Encode this round's params distribution ONCE. Packed codec: the
+        XOR delta of the packed buffer against the previous broadcast (a
+        full message only on the first round or a layout change) — one
+        broadcast for all handlers instead of a params blob per handler.
+        Pickle codec (baseline): the legacy full pytree blob, unicast
+        per handler. Returns (blob, is_broadcast)."""
+        from repro.core import flatbuf
+        from repro.core.tee import wire
+        from repro.core.tee.components import _ser
+
+        if self.codec != "packed" or not wire.packable(params):
+            return _ser(params, codec="pickle"), False
+        layout = flatbuf.layout_of(params)
+        new_buf = wire.pack_np(layout, params)
+        self._bcast_epoch += 1
+        if self._bcast_buf is None or self._bcast_layout is not layout:
+            blob = wire.encode_full(layout, new_buf, epoch=self._bcast_epoch)
+        else:
+            blob = wire.encode_delta(layout, self._bcast_buf, new_buf,
+                                     epoch=self._bcast_epoch)
+        self._bcast_buf, self._bcast_layout = new_buf, layout
+        return blob, True
+
+    def _resync_blob(self) -> bytes:
+        """Full packed params at the current epoch — the unicast a handler
+        that missed rounds (drop/rejoin) gets when its delta chain broke."""
+        from repro.core.tee import wire
+        return wire.encode_full(self._bcast_layout, self._bcast_buf,
+                                epoch=self._bcast_epoch)
+
+    def _collect_updates(self, params, plan: dict, grad_fn: Callable,
+                         sink: Optional[Callable] = None) -> dict:
+        """Distribute params + keys to the round's active handlers and
+        collect their sealed masked updates (per-party round-trip timing
+        feeds straggler attribution). A handler whose delta chain broke
+        raises StaleParamsError in-TEE and is resynced with a full blob.
+        ``sink(name, blob)`` streams each update out as it is produced (the
+        pipelined runner feeds the updater's ingestion thread with it)."""
+        from repro.core.tee import wire
+
+        blob, is_bcast = self._params_broadcast(params)
+        active = plan["active"]
+        if is_bcast:
+            # a broadcast medium carries the delta once, not per handler
+            self.wire_stats["broadcast_bytes"] += len(blob)
+        else:
+            self.wire_stats["broadcast_bytes"] += \
+                len(blob) * int(np.sum(active))
+        updates = {}
+        for h in self.handlers:
+            if not active[h.silo_idx]:
+                continue
+            t0 = time.perf_counter()
+            try:
+                u = h.compute_update(blob, grad_fn, self.privacy,
+                                     plan["keys"], self.n_silos,
+                                     clip_bound=self.clip_bound,
+                                     active=active,
+                                     noise_state=plan["noise_state"],
+                                     verdicts=plan["verdicts"])
+            except wire.StaleParamsError:
+                full = self._resync_blob()
+                self.wire_stats["resync_bytes"] += len(full)
+                u = h.compute_update(full, grad_fn, self.privacy,
+                                     plan["keys"], self.n_silos,
+                                     clip_bound=self.clip_bound,
+                                     active=active,
+                                     noise_state=plan["noise_state"],
+                                     verdicts=plan["verdicts"])
+            # real per-party timing feeds straggler attribution
+            self.telemetry.observe(h.silo_idx, time.perf_counter() - t0)
+            self.wire_stats["update_bytes"] += len(u)
+            updates[h.name] = u
+            if sink is not None:
+                sink(h.name, u)
+        if not updates:
+            raise RuntimeError(
+                "no silo may contribute this round (budgets exhausted or "
+                "membership empty); DP forbids further training")
+        return updates
+
     def step(self, step_idx: int, params, grad_fn: Callable,
              update_fn: Callable, lr: float):
         """One round: admin keys + participation set + budget verdicts +
@@ -382,37 +516,65 @@ class CollaborativeSession:
         contributors -> admin advances the correction state and the ledger
         records the round's participation bitmask. Returns
         (new_params, mean_loss)."""
-        from repro.core.tee.components import _ser
-
-        keys = self.admin.keys_for_step(step_idx)
-        verdicts = self.admin.verdicts()
-        for silo in self.accountant.take_exclusions():
-            # budget-driven membership drop: no rejoin without override
-            self.membership.exclude(silo, step=step_idx, reason="budget")
-        active = self.membership.active_at(step_idx) & verdicts
-        noise_state = self.admin.state_for_step()
-        blob = _ser(params)
-        updates = {}
-        for h in self.handlers:
-            if not active[h.silo_idx]:
-                continue
-            t0 = time.perf_counter()
-            updates[h.name] = h.compute_update(blob, grad_fn, self.privacy,
-                                               keys, self.n_silos,
-                                               clip_bound=self.clip_bound,
-                                               active=active,
-                                               noise_state=noise_state,
-                                               verdicts=verdicts)
-            # real per-party timing feeds straggler attribution
-            self.telemetry.observe(h.silo_idx, time.perf_counter() - t0)
-        if not updates:
-            raise RuntimeError(
-                "no silo may contribute this round (budgets exhausted or "
-                "membership empty); DP forbids further training")
+        plan = self._admin_plane(step_idx)
+        updates = self._collect_updates(params, plan, grad_fn)
         params, loss = self.updater.aggregate(updates, params, update_fn,
                                               lr=lr)
-        self.admin.advance(keys, active)  # ledger records the bitmask
+        self.admin.advance(plan["keys"], plan["active"])  # ledger bitmask
+        self.wire_stats["rounds"] += 1
         return params, loss
+
+    def run(self, params, grad_fn: Callable, update_fn: Callable, lr: float,
+            n_rounds: int, pipelined: bool = True):
+        """Drive ``n_rounds`` of the protocol. ``pipelined=True`` streams
+        each handler's sealed update into the updater's ingestion thread as
+        soon as it is produced (decrypt + decode + accumulate of silo i
+        overlaps silo i+1's compute; a single worker preserves silo order,
+        so the sum's fp association — part of the cross-tier bit-parity
+        contract — is unchanged), and overlaps the admin plane — round t's
+        ledger write plus round t+1's key fanout, verdict distribution and
+        correction-state rollout — with the tail of the aggregation. The
+        updater and admin are separate trust domains with disjoint state, so
+        the overlap changes nothing about the math — bit-identical to the
+        serial loop. Per-party handler timings stay honest: each handler
+        round-trip is measured synchronously, as in :meth:`step`. Returns
+        (params, [per-round mean losses])."""
+        from concurrent.futures import ThreadPoolExecutor
+
+        losses = []
+        start = self._next_round
+        if not pipelined:
+            for t in range(start, start + n_rounds):
+                params, loss = self.step(t, params, grad_fn, update_fn, lr)
+                losses.append(loss)
+            return params, losses
+        with ThreadPoolExecutor(max_workers=1,
+                                thread_name_prefix="updater") as ex:
+            plan = self._admin_plane(start)
+            for t in range(start, start + n_rounds):
+                rs = self.updater.begin_round(params)
+                ingests = []
+                self._collect_updates(
+                    params, plan, grad_fn,
+                    sink=lambda name, blob: ingests.append(
+                        ex.submit(self.updater.ingest, rs, name, blob)))
+                for ing in ingests:
+                    # decode/auth errors surface BEFORE the admin plane
+                    # advances — same failure behaviour as the serial loop
+                    ing.result()
+                fut = ex.submit(self.updater.finish_round, rs, update_fn, lr)
+                # overlapped with the aggregation tail running above. If the
+                # model owner's update_fn itself fails, this round is already
+                # recorded — conservative: the handlers' masked updates left
+                # the TEEs, so the privacy loss was genuinely incurred
+                self.admin.advance(plan["keys"], plan["active"])
+                self.wire_stats["rounds"] += 1
+                next_plan = self._admin_plane(t + 1) \
+                    if t + 1 < start + n_rounds else None
+                params, loss = fut.result()
+                losses.append(loss)
+                plan = next_plan
+        return params, losses
 
     def epsilon(self, silo: Optional[int] = None) -> float:
         """Spent epsilon — global, or silo-specific over that owner's own
@@ -420,7 +582,11 @@ class CollaborativeSession:
         return self.accountant.epsilon(silo)
 
     def privacy_report(self) -> dict:
-        """The admin-plane spend report (per-silo epsilon/budgets/verdicts)."""
+        """The admin-plane spend report (per-silo epsilon/budgets/verdicts),
+        HMAC-signed with a key derived from the admin's attestation identity
+        (verify with ``repro.analysis.report.verify_spend_report``)."""
+        if getattr(self.admin, "ledger", None) is not None:
+            return self.admin.sign_spend_report()
         return self.accountant.spend_report()
 
     @property

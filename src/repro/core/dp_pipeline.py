@@ -70,6 +70,26 @@ from repro.kernels.dp_fused import ops as fused_ops
 NOISE_TREE = "dp_noise_tree"
 
 
+def is_static_full(active) -> bool:
+    """True iff the participation set is *statically* known to be all-active
+    (``None``, or a concrete all-True array at trace time). The engine then
+    emits the fixed-membership graph: no ring-neighbour argmax, no per-silo
+    gate multiplies, constant stream scales. Every elided op is a
+    multiply-by-1.0 or a reduction over a constant, so the fast path is
+    bit-identical to the dynamic graph evaluated on an all-active set."""
+    if active is None:
+        return True
+    if isinstance(active, jax.core.Tracer):
+        return False
+    return bool(np.all(np.asarray(active)))
+
+
+def _static_all_true(vec) -> bool:
+    """Concrete all-True vector (used for the carried prev_active set)."""
+    return vec is not None and not isinstance(vec, jax.core.Tracer) \
+        and bool(np.all(np.asarray(vec)))
+
+
 @dataclass(frozen=True)
 class ExecutionPolicy:
     """How the pipeline executes: ``packed`` runs every stage on the flat
@@ -113,12 +133,17 @@ class DPPipeline:
 
     def active_count(self, active) -> jax.Array:
         """Number of contributing silos (>=1), the aggregate's divisor."""
+        if is_static_full(active):
+            return jnp.asarray(float(self.n_silos), jnp.float32)
         return jnp.maximum(jnp.sum(active.astype(jnp.float32)), 1.0)
 
     def next_active(self, silo, active) -> jax.Array:
         """The next *active* silo after ``silo`` in the ring — the pairwise
         mask neighbour. Skipping dropped members keeps the r-terms
-        telescoping to zero over any participation set."""
+        telescoping to zero over any participation set; a statically full
+        set short-circuits to the fixed ring (no argmax/gather)."""
+        if is_static_full(active):
+            return (jnp.asarray(silo, jnp.int32) + 1) % self.n_silos
         offs = jnp.arange(1, self.n_silos + 1, dtype=jnp.int32)
         cand = (jnp.asarray(silo, jnp.int32) + offs) % self.n_silos
         return cand[jnp.argmax(active[cand])]
@@ -141,11 +166,17 @@ class DPPipeline:
     # -- per-stream noise scales --------------------------------------------
     def _stream_scales(self, bound, active, state: NoiseState):
         """(s_t, s_prev, prev_active): per-silo noise stds at steps t / t-1.
-        k active streams at sigma_c/sqrt(k) sum to std exactly sigma_c."""
+        k active streams at sigma_c/sqrt(k) sum to std exactly sigma_c.
+        Concrete participation sets resolve to constant scales (the sqrt of
+        a constant folds at compile time — same fp32 value either way)."""
         sc = self.priv.sigma * jnp.asarray(bound, jnp.float32)
         s = sc / jnp.sqrt(self.active_count(active))
         pa = self.prev_active(state)
-        k_prev = jnp.maximum(jnp.sum(pa.astype(jnp.float32)), 1.0)
+        if isinstance(pa, jax.core.Tracer):
+            k_prev = jnp.maximum(jnp.sum(pa.astype(jnp.float32)), 1.0)
+        else:
+            k_prev = jnp.asarray(max(float(np.sum(np.asarray(pa))), 1.0),
+                                 jnp.float32)
         return s, sc / jnp.sqrt(k_prev), pa
 
     # -- admin mask construction (paper-faithful O(n*P) baseline) ------------
@@ -217,6 +248,8 @@ class DPPipeline:
         deciding who contributes what weight to the aggregate."""
         scales = clipping.clip_scale(norms, bound) if self.priv.enabled \
             else jnp.ones_like(norms, jnp.float32)
+        if is_static_full(active):
+            return scales  # gating is a multiply-by-ones: skip it
         return scales * active.astype(scales.dtype)
 
     # -- stage: masked_aggregate ---------------------------------------------
@@ -241,7 +274,8 @@ class DPPipeline:
         ring only — elastic runs require the packed policy)."""
         priv = self.priv
         silo = jnp.asarray(silo, jnp.int32)
-        gate = active[silo].astype(jnp.float32)
+        static = is_static_full(active)
+        gate = 1.0 if static else active[silo].astype(jnp.float32)
         sigma_c = priv.sigma * jnp.asarray(bound, jnp.float32)
         use_prev = priv.noise_lambda > 0.0
         if priv.mask_mode == "none":
@@ -284,7 +318,9 @@ class DPPipeline:
                 g_tree, masks)
         s, s_prev, pa = self._stream_scales(bound, active, state)
         hp = jnp.where(state.has_prev, 1.0, 0.0)
-        lam_gate = priv.noise_lambda * hp * gate * pa[silo].astype(jnp.float32)
+        pa_gate = 1.0 if _static_all_true(pa) \
+            else pa[silo].astype(jnp.float32)
+        lam_gate = priv.noise_lambda * hp * gate * pa_gate
         if self.policy.mode == "perleaf":
             # legacy per-leaf stream family; the ring is static (full), so a
             # partial participation set would leave uncancelled +-B*r terms
@@ -311,11 +347,13 @@ class DPPipeline:
             return masked
         packed = flatbuf.pack(self.layout, g_tree)
         return fused_ops.clip_mask_packed(
-            packed, scale * gate, masking._raw(keys.key_r),
+            packed, scale if static else scale * gate,
+            masking._raw(keys.key_r),
             masking._raw(keys.key_xi), state.prev_key, silo, self.n_silos,
             sigma_c, priv.mask_scale * sigma_c * gate, lam_gate,
             use_pairwise=True, use_prev=use_prev, impl=self.policy.inner,
-            nxt=self.next_active(silo, active), noise_scale=s * gate,
+            nxt=self.next_active(silo, active),
+            noise_scale=s if static else s * gate,
             prev_noise_scale=s_prev)
 
     def finalize(self, agg):
@@ -339,19 +377,23 @@ class DPPipeline:
         hp = jnp.where(state.has_prev, 1.0, 0.0)
         use_prev = priv.noise_lambda > 0.0
         sigma_c = priv.sigma * jnp.asarray(bound, jnp.float32)
+        static = is_static_full(active)
+        pa_full = _static_all_true(pa)
         # each silo's share is drawn on a zero buffer then added, so the fp
         # association matches the wire updater's left-to-right reduce of
         # per-silo contributions (bit-identical noise across tiers)
         zeros = jnp.zeros_like(g_sum, jnp.float32)
 
         def add_share(i, out):
-            gate = active[i].astype(jnp.float32)
-            lam_gate = priv.noise_lambda * hp * gate * pa[i].astype(jnp.float32)
+            gate = 1.0 if static else active[i].astype(jnp.float32)
+            pa_gate = 1.0 if pa_full else pa[i].astype(jnp.float32)
+            lam_gate = priv.noise_lambda * hp * gate * pa_gate
             share = fused_ops.clip_mask_packed(
                 zeros, 1.0, kx, kx, state.prev_key, jnp.asarray(i, jnp.int32),
                 self.n_silos, sigma_c, 0.0, lam_gate, use_pairwise=False,
                 use_prev=use_prev, impl=self.policy.inner,
-                noise_scale=s * gate, prev_noise_scale=s_prev)
+                noise_scale=s if static else s * gate,
+                prev_noise_scale=s_prev)
             return out + share
 
         out = g_sum.astype(jnp.float32)

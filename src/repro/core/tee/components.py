@@ -19,8 +19,6 @@ Workflow (paper Fig. 1):
 from __future__ import annotations
 
 import hashlib
-import io
-import pickle
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -34,39 +32,53 @@ from repro.core.privacy import PrivacyLedger
 from repro.core.barrier import BarrierKeys, step_keys
 from repro.core.dp_pipeline import DPPipeline
 from repro.core.noise_correction import NoiseState, init_state
+from repro.core.tee import wire
 from repro.core.tee.attestation import (AttestationService, LaunchPolicy,
                                         measure_config, measure_modules)
-from repro.core.tee.channels import SecureChannel, derive_key, open_sealed, seal
+from repro.core.tee.channels import (SecureChannel, derive_key, open_sealed,
+                                     seal, spend_report_mac)
 from repro.core.tee.kds import KeyDistributionService
 from repro.core.tee.sandbox import Sandbox
 
 
-def _ser(tree) -> bytes:
-    buf = io.BytesIO()
-    flat, treedef = jax.tree_util.tree_flatten(tree)
-    np.savez(buf, *[np.asarray(x) for x in flat])
-    return pickle.dumps((buf.getvalue(), treedef))
+def _ser(tree, codec: str = "packed") -> bytes:
+    """Serialize a pytree for the wire: packed flat-buffer codec when
+    lossless, legacy pickle+npz fallback otherwise (see core/tee/wire.py)."""
+    return wire.encode_tree(tree, codec=codec)
 
 
 def _deser(blob: bytes):
-    data, treedef = pickle.loads(blob)
-    with np.load(io.BytesIO(data)) as z:
-        flat = [z[k] for k in z.files]
-    return jax.tree_util.tree_unflatten(treedef, [jnp.asarray(x) for x in flat])
+    return wire.decode_tree(blob)
 
 
 def _guarded_modules():
     """The service code whose measurement the KDS gates key release on: the
     DP engine, the privacy ledger (budget enforcement is part of the trusted
     computing base — malicious training code must not be able to swap it
-    out) and the kernel-level pieces they compose."""
+    out), the packed-buffer layout + wire codec (a component speaking a
+    different wire format is a different component) and the kernel-level
+    pieces they compose."""
     import repro.core.barrier as _b
     import repro.core.clipping as _c
     import repro.core.dp_pipeline as _p
+    import repro.core.flatbuf as _f
     import repro.core.masking as _m
     import repro.core.privacy.bounds as _pb
     import repro.core.privacy.ledger as _pl
-    return [_p, _pl, _pb, _b, _c, _m]
+    import repro.core.tee.wire as _w
+    return [_p, _pl, _pb, _b, _c, _m, _f, _w]
+
+
+def _bind_configs(code: str, ledger_config: dict, wire_config: dict) -> str:
+    """Extend the code measurement with the session's launch configuration:
+    per-silo budgets (what the owners agreed to enforce) and the wire codec
+    identity (optionally pinned to the session's packed-layout fingerprint).
+    A service launched with different parameters measures differently and
+    the KDS withholds keys."""
+    if not ledger_config and not wire_config:
+        return code
+    cfg = {"ledger": ledger_config, "wire": wire_config}
+    return hashlib.sha256((code + measure_config(cfg)).encode()).hexdigest()
 
 
 # ---------------------------------------------------------------------------
@@ -81,7 +93,13 @@ class UntrustedStorage:
         self.blobs[asset_id] = blob
 
     def get(self, asset_id: str) -> bytes:
-        return self.blobs[asset_id]
+        try:
+            return self.blobs[asset_id]
+        except KeyError:
+            raise KeyError(
+                f"unknown asset {asset_id!r} in untrusted storage "
+                f"({len(self.blobs)} assets held); was it ever uploaded, "
+                f"or was it garbage-collected?") from None
 
 
 # ---------------------------------------------------------------------------
@@ -95,21 +113,21 @@ class Component:
     report: object = None
 
     def __post_init__(self):
-        # deployment snapshot: the ledger config in force when this
+        # deployment snapshot: the ledger + wire configs in force when this
         # component was launched. The component measures *its own* launch
         # parameters — a component deployed against different enforcement
-        # terms genuinely attests to a different value (the check is not
+        # terms (or speaking a different wire codec / packed layout)
+        # genuinely attests to a different value (the check is not
         # self-fulfilling against the verifier's expectation)
         self.launch_ledger_config = dict(self.service.ledger_config) \
+            if self.service is not None else {}
+        self.launch_wire_config = dict(self.service.wire_config) \
             if self.service is not None else {}
 
     def measurement(self) -> str:
         code = measure_modules(_guarded_modules())
-        if not self.launch_ledger_config:
-            return code
-        return hashlib.sha256(
-            (code + measure_config(self.launch_ledger_config)).encode()
-        ).hexdigest()
+        return _bind_configs(code, self.launch_ledger_config,
+                             self.launch_wire_config)
 
     def attest(self, policy: LaunchPolicy):
         self.report = self.service.attestation.issue(
@@ -132,6 +150,98 @@ class DataHandler(Component):
     # set, caller-supplied verdicts are ignored — an untrusted driver can't
     # fabricate an all-allowed vector
     admin: Optional["Admin"] = None
+    # wire codec: 'packed' ships raw flat buffers + XOR-delta param sync;
+    # 'pickle' keeps the legacy pytree blobs (benchmark baseline)
+    codec: str = "packed"
+
+    def __post_init__(self):
+        super().__post_init__()
+        # packed-params cache for the delta broadcast: the pinned packed
+        # buffer, its layout, the layout fingerprint (also pinned through
+        # the launch wire config when the session declared one) and the
+        # epoch of the last applied broadcast
+        self._cached_buf: Optional[np.ndarray] = None
+        self._cached_layout = None
+        self._params_epoch: int = -1
+        pinned = self.launch_wire_config.get("layout")
+        self._pinned_fp: Optional[bytes] = bytes.fromhex(pinned) \
+            if pinned else None
+        # jitted norm->clip->mask pipeline, cached per (priv, layout, n)
+        self._pipe_key = None
+        self._pipe_fn = None
+
+    def _check_pin(self, fp: bytes) -> None:
+        if self._pinned_fp is not None and fp != self._pinned_fp:
+            raise wire.WireFormatError(
+                f"{self.name}: broadcast layout fingerprint does not match "
+                f"the attested session layout (possible model substitution)")
+
+    def _sync_params(self, params_blob: bytes):
+        """Decode a params broadcast. FULL messages (re)pin the packed
+        cache; DELTA messages apply the XOR delta to the pinned buffer —
+        bit-exact, zero float drift — and raise :class:`StaleParamsError`
+        when this handler missed rounds (the admin then resyncs it with a
+        full blob). Legacy pickle blobs pass straight through."""
+        msg = wire.decode(params_blob)
+        if msg.kind == wire.KIND_PICKLE:
+            return wire.decode_tree(params_blob)
+        if msg.kind == wire.KIND_FULL:
+            layout, buf = wire.decode_full(msg)
+            self._check_pin(msg.layout_fp)
+            if self._pinned_fp is None:
+                # pin the attested initial params' layout: later broadcasts
+                # for a different model shape are rejected, not applied
+                self._pinned_fp = msg.layout_fp
+            self._cached_layout, self._cached_buf = layout, buf.copy()
+            self._params_epoch = msg.epoch
+            return flatbuf.unpack(layout, jnp.asarray(self._cached_buf))
+        if msg.kind == wire.KIND_DELTA:
+            if self._cached_buf is None:
+                raise wire.StaleParamsError(
+                    f"{self.name}: delta broadcast but no pinned params "
+                    f"(never synced) — need a full resync")
+            if msg.epoch != self._params_epoch + 1:
+                raise wire.StaleParamsError(
+                    f"{self.name}: delta epoch {msg.epoch} does not follow "
+                    f"cached epoch {self._params_epoch} (missed rounds) — "
+                    f"need a full resync")
+            self._check_pin(msg.layout_fp)
+            self._cached_buf = wire.apply_delta(self._cached_layout,
+                                                self._cached_buf, msg)
+            self._params_epoch = msg.epoch
+            return flatbuf.unpack(self._cached_layout,
+                                  jnp.asarray(self._cached_buf))
+        raise wire.WireFormatError(
+            f"{self.name}: unexpected wire kind {msg.kind} in params sync")
+
+    def _masked_contrib(self, pipe: DPPipeline, grads, active,
+                        keys: BarrierKeys, state: NoiseState, clip_bound):
+        """The handler's norm -> clip_scale -> silo_contribution stages as
+        ONE jitted dispatch (cached per engine configuration): the per-round
+        protocol cost is the codec + channel crypto, not hundreds of eager
+        op dispatches through the mask construction. The admin-mask and
+        perleaf constructions keep the eager path — they rely on concrete
+        participation sets (single-row reconstruction / full-ring guard)."""
+        if pipe.priv.mask_mode == "admin" or pipe.policy.mode != "packed":
+            norm = pipe.norm_tree(grads)
+            scale = pipe.clip_scale(norm, clip_bound)
+            return pipe.silo_contribution(grads, self.silo_idx, scale,
+                                          active, keys, state, clip_bound), \
+                norm
+        cache_key = (pipe.priv, pipe.layout, pipe.n_silos, pipe.policy,
+                     state.prev_active is None)
+        if self._pipe_key != cache_key:
+            silo = self.silo_idx
+
+            def fn(g, active, keys, state, bound):
+                norm = pipe.norm_tree(g)
+                scale = pipe.clip_scale(norm, bound)
+                return pipe.silo_contribution(g, silo, scale, active, keys,
+                                              state, bound), norm
+
+            self._pipe_fn, self._pipe_key = jax.jit(fn), cache_key
+        return self._pipe_fn(grads, active, keys, state,
+                             jnp.asarray(clip_bound, jnp.float32))
 
     def compute_update(self, params_blob: bytes, grad_fn: Callable,
                        priv: PrivacyConfig, keys: BarrierKeys, n_silos: int,
@@ -153,7 +263,7 @@ class DataHandler(Component):
             raise PermissionError(
                 f"silo {self.silo_idx}: owner's privacy budget is exhausted "
                 f"(ledger verdict); refusing to compute an update")
-        params = _deser(params_blob)
+        params = self._sync_params(params_blob)
         # untrusted model-owner code inside the sandbox (R1/R2)
         loss, grads = self.sandbox.run(grad_fn, params, self.data)
         pipe = DPPipeline(priv, flatbuf.layout_of(grads), n_silos)
@@ -161,13 +271,21 @@ class DataHandler(Component):
             else jnp.asarray(active, jnp.bool_)
         state = noise_state if noise_state is not None \
             else init_state(jnp.zeros((2,), jnp.uint32), n_silos=n_silos)
-        norm = pipe.norm_tree(grads)
-        scale = pipe.clip_scale(norm, clip_bound)
-        contrib = pipe.silo_contribution(grads, self.silo_idx, scale, active,
-                                         keys, state, clip_bound)
-        masked = pipe.finalize(contrib)
-        payload = _ser({"update": masked, "loss": jnp.asarray(loss),
-                        "norm": norm})
+        contrib, norm = self._masked_contrib(pipe, grads, active, keys,
+                                             state, clip_bound)
+        if self.codec == "packed":
+            # ship the packed (P,) buffer straight off the DP engine — one
+            # contiguous memoryview into the channel, no tree re-traversal
+            if isinstance(contrib, jax.Array) and contrib.ndim == 1:
+                buf = np.asarray(contrib)
+            else:  # perleaf/admin/none constructions yield trees
+                buf = wire.pack_np(pipe.layout, pipe.finalize(contrib))
+            payload = wire.encode_update(pipe.layout, buf, float(loss),
+                                         float(norm))
+        else:
+            payload = _ser({"update": pipe.finalize(contrib),
+                            "loss": jnp.asarray(loss), "norm": norm},
+                           codec="pickle")
         return self.channel.send(payload)
 
 
@@ -179,23 +297,60 @@ class ModelUpdater(Component):
     channels: dict = field(default_factory=dict)
     received_updates: list = field(default_factory=list)
 
+    def begin_round(self, params) -> dict:
+        """Open a streaming aggregation round: updates are ingested one at a
+        time (in silo order — the sum's fp association is part of the
+        cross-tier bit-parity contract) as handlers produce them, so
+        decrypt+accumulate of silo i overlaps silo i+1's compute."""
+        return {"layout": flatbuf.layout_of(params), "params": params,
+                "total": None, "losses": []}
+
+    def ingest(self, round_state: dict, silo: str, blob: bytes) -> None:
+        """Decrypt + decode + accumulate one handler's sealed update.
+        Packed KIND_UPDATE messages accumulate directly on the flat ``(P,)``
+        buffers (``np.frombuffer`` views — zero deserialization); legacy
+        pickle payloads are packed into the same buffers first. Both give
+        bit-identical aggregates (packing is a permutation with zero
+        padding; slicing commutes with the silo-ordered sum)."""
+        layout = round_state["layout"]
+        raw = self.channels[silo].recv(blob)
+        msg = wire.decode(raw)
+        if msg.kind == wire.KIND_UPDATE:
+            buf, loss, _norm = wire.decode_update(msg, layout)
+            self.received_updates.append(jax.tree.map(
+                np.asarray, wire.unpack_np(layout, buf, dtype=np.float32)))
+            round_state["losses"].append(loss)
+        else:
+            payload = wire.decode_tree(raw)
+            self.received_updates.append(
+                jax.tree.map(np.asarray, payload["update"]))
+            round_state["losses"].append(float(payload["loss"]))
+            buf = wire.pack_np(layout, payload["update"])
+        # both sides are fp32 by wire contract (decode_update / pack_np):
+        # a plain add keeps the ingestion path copy-free
+        total = round_state["total"]
+        round_state["total"] = buf if total is None else total + buf
+
+    def finish_round(self, round_state: dict, update_fn: Callable,
+                     lr: float):
+        """Close the round: divide by the actual contribution count and run
+        the (sandbox-supplied) model-updating code."""
+        n_contrib = max(len(round_state["losses"]), 1)
+        mean_update = wire.unpack_np(
+            round_state["layout"],
+            round_state["total"] / np.float32(n_contrib), dtype=np.float32)
+        new_params = update_fn(round_state["params"], mean_update, lr)
+        return new_params, float(np.mean(round_state["losses"]))
+
     def aggregate(self, blobs: dict, params, update_fn: Callable, lr: float,
                   n_silos: Optional[int] = None):
         """``n_silos`` is accepted for call-site compatibility but the
         divisor is the actual contribution count (len(blobs)) — dropped
         silos shrink the mean, matching the SPMD tiers."""
-        updates, losses = [], []
+        rs = self.begin_round(params)
         for silo, blob in blobs.items():
-            payload = _deser(self.channels[silo].recv(blob))
-            self.received_updates.append(
-                jax.tree.map(np.asarray, payload["update"]))
-            losses.append(float(payload["loss"]))
-            updates.append(payload["update"])
-        total = dp_pipeline.reduce_contributions(updates)
-        n_contrib = max(len(blobs), 1)
-        mean_update = jax.tree.map(lambda g: g / n_contrib, total)
-        new_params = update_fn(params, mean_update, lr)
-        return new_params, float(np.mean(losses))
+            self.ingest(rs, silo, blob)
+        return self.finish_round(rs, update_fn, lr)
 
 
 @dataclass
@@ -249,6 +404,35 @@ class Admin(Component):
         if self.ledger is not None:
             self.ledger.record(np.asarray(active))
 
+    def sign_spend_report(self) -> dict:
+        """The ledger's spend report, HMAC-signed with a key derived from
+        this admin's attestation identity — the hardware-root signature over
+        its measured report, which is NOT embedded in the output: a verifier
+        must recompute it through the attestation service (the root of
+        trust), so a driver holding only the JSON can neither verify nor
+        re-sign a tampered body. Verify with
+        :func:`repro.analysis.report.verify_spend_report(report,
+        attestation_service)` (ROADMAP: ledger-signed spend reports)."""
+        if self.ledger is None:
+            raise ValueError("admin has no ledger to report on")
+        report = self.ledger.spend_report()
+        if self.report is None:
+            return report  # unattested admin: plain report, nothing to bind
+        signed = dict(report)
+        signed["signature"] = {
+            "scheme": "hmac-sha256/attestation-identity",
+            "hmac": spend_report_mac(report, self.report.signature),
+            # identity claim only — the signature over it stays with the
+            # attestation service, where the verifier recomputes it
+            "signer": {
+                "component": self.report.component,
+                "code_measurement": self.report.code_measurement,
+                "policy_hash": self.report.policy_hash,
+                "nonce": self.report.nonce,
+            },
+        }
+        return signed
+
 
 class ManagementService:
     """Sets up a training session and tracks metadata (paper §3.2)."""
@@ -260,21 +444,25 @@ class ManagementService:
         self.policy = LaunchPolicy()
         self.sessions: dict[str, dict] = {}
         self.ledger_config: dict = {}
+        # the wire codec is part of the trusted protocol surface: sessions
+        # may pin the packed-layout fingerprint of the model they agreed to
+        # train, binding the wire format into every component's measurement
+        self.wire_config: dict = {"codec": wire.WIRE_CODEC_ID}
 
     def expected_measurement(self) -> str:
         """Guarded code measurement, extended with the session's ledger
-        config once a session exists: per-silo budgets are part of what the
-        owners agreed to, so a service launched with different enforcement
-        parameters measures differently and the KDS withholds keys."""
-        code = measure_modules(_guarded_modules())
-        if not self.ledger_config:
-            return code
-        return hashlib.sha256(
-            (code + measure_config(self.ledger_config)).encode()).hexdigest()
+        config (per-silo budgets are part of what the owners agreed to) and
+        wire config (codec id + optionally the pinned packed-layout
+        fingerprint): a service launched with different enforcement or
+        protocol parameters measures differently and the KDS withholds
+        keys."""
+        return _bind_configs(measure_modules(_guarded_modules()),
+                             self.ledger_config, self.wire_config)
 
     def create_session(self, session_id: str, n_silos: int,
                        priv: PrivacyConfig,
-                       ledger_config: Optional[dict] = None) -> dict:
+                       ledger_config: Optional[dict] = None,
+                       wire_config: Optional[dict] = None) -> dict:
         if ledger_config is not None:
             cfg = ledger_config
         else:
@@ -282,18 +470,22 @@ class ManagementService:
             # ledger's config_dict() yields for these terms, or two
             # semantically-equal sessions would measure differently
             cfg = PrivacyLedger.from_privacy_config(priv, n_silos).config_dict()
-        if self.sessions and cfg != self.ledger_config:
+        wcfg = dict(self.wire_config) if wire_config is None \
+            else dict(wire_config)
+        if self.sessions and (cfg != self.ledger_config
+                              or wcfg != self.wire_config):
             # the measurement gating *all* keys on this service binds one
-            # ledger config; silently swapping it would deny earlier
-            # sessions' components their keys. One service instance = one
-            # enforcement config — deploy another service for another.
+            # ledger + wire config; silently swapping either would deny
+            # earlier sessions' components their keys. One service instance
+            # = one config — deploy another service for another.
             raise ValueError(
-                "this ManagementService already measures a different ledger "
-                "config; deploy a separate service for a session with "
-                "different enforcement terms")
+                "this ManagementService already measures a different ledger/"
+                "wire config; deploy a separate service for a session with "
+                "different enforcement or protocol terms")
         self.ledger_config = cfg
+        self.wire_config = wcfg
         s = {"id": session_id, "n_silos": n_silos, "priv": priv,
              "progress": 0, "components": {},
-             "ledger_config": dict(cfg)}
+             "ledger_config": dict(cfg), "wire_config": dict(wcfg)}
         self.sessions[session_id] = s
         return s

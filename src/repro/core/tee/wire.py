@@ -1,0 +1,316 @@
+"""Packed zero-copy wire codec for the TEE protocol tier.
+
+Every other execution tier already moves gradients as one contiguous
+``(P,)`` packed fp32 buffer (``core/flatbuf.PackedLayout``); the wire tier
+used to re-serialize the same data as ``pickle`` + ``np.savez`` pytree blobs
+per message.  This module is the wire-format counterpart of the packed
+engine: a fixed 40-byte header + the raw packed buffer, so a masked update
+is one contiguous memoryview end to end (``np.frombuffer`` on the receive
+path — no per-leaf zip entries, no pickle of array data).
+
+Message kinds:
+
+* ``KIND_PICKLE`` — the legacy pytree fallback (pickle + uncompressed npz),
+  kept for payloads that are not packable (non-fp32 leaves) and as the
+  benchmark baseline (``codec='pickle'``).
+* ``KIND_FULL``   — full packed params: a small pickled *structure
+  descriptor* (treedef + element shapes + dtypes, no array data) followed by
+  the raw fp32 buffer.  Sent once at session start and for resyncs.
+* ``KIND_DELTA``  — the per-round broadcast: the XOR of the new and previous
+  packed params buffers (bitwise on the fp32 words, so
+  ``cached ^ delta == new`` *exactly* — no float-drift accumulation), tagged
+  with a monotone epoch so a handler that missed rounds detects staleness
+  and requests a full resync (:class:`StaleParamsError`).
+* ``KIND_UPDATE`` — a handler's masked update: the raw packed ``(P,)``
+  buffer straight out of ``DPPipeline.silo_contribution`` plus aux scalars
+  (loss, norm) in the header — zero tree traversal on the hot path.
+
+The header carries the **layout fingerprint** (16 bytes over the layout's
+treedef/shapes/dtypes/offsets); receivers reject buffers whose layout does
+not match theirs, and the fingerprint also joins the attestation measurement
+via the management service's wire config (see ``components.py``) — a
+component speaking a different wire format measures differently and the KDS
+withholds its keys.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import io
+import pickle
+import struct
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flatbuf
+from repro.core.flatbuf import PackedLayout
+
+WIRE_CODEC_ID = "packed-wire-v1"
+
+MAGIC = b"RPRW"
+VERSION = 1
+
+KIND_PICKLE = 0
+KIND_FULL = 1
+KIND_DELTA = 2
+KIND_UPDATE = 3
+
+# magic(4) version(1) kind(1) n_aux(2) epoch(8) layout_fp(16) body_len(8)
+_HEADER = struct.Struct("<4sBBHQ16sQ")
+_ZERO_FP = b"\x00" * 16
+
+
+class WireFormatError(ValueError):
+    """Malformed / truncated / mismatched wire message."""
+
+
+class StaleParamsError(WireFormatError):
+    """A delta broadcast the receiver cannot apply (missed epochs or no
+    pinned params) — the sender must resync with a KIND_FULL message."""
+
+
+# ---------------------------------------------------------------------------
+# Layout identity
+
+
+@functools.lru_cache(maxsize=256)
+def layout_fingerprint(layout: PackedLayout) -> bytes:
+    """16-byte identity of a packed layout: tree structure, element shapes,
+    dtypes and the derived offsets/total. Two parties agreeing on the
+    fingerprint agree on the meaning of every byte in the buffer."""
+    desc = repr((str(layout.treedef), layout.shapes, layout.dtypes,
+                 layout.sizes, layout.offsets, layout.total))
+    return hashlib.sha256(desc.encode()).digest()[:16]
+
+
+def packable(tree) -> bool:
+    """True when the packed codec is lossless for ``tree``: every leaf is an
+    fp32 array (the packed buffer is fp32; other dtypes would round-trip
+    through a cast and must take the pickle fallback)."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return False
+    for leaf in leaves:
+        if not hasattr(leaf, "dtype") or jnp.dtype(leaf.dtype) != jnp.float32:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Host-side pack/unpack (numpy, no jit round trip on the protocol path)
+
+
+def pack_np(layout: PackedLayout, tree) -> np.ndarray:
+    """Flatten ``tree`` into one fp32 ``(total,)`` numpy buffer (padding
+    zero), without going through a jax dispatch per message."""
+    buf = np.zeros((layout.total,), np.float32)
+    for leaf, size, off in zip(jax.tree.leaves(tree), layout.sizes,
+                               layout.offsets):
+        buf[off:off + size] = np.asarray(leaf, np.float32).reshape(-1)
+    return buf
+
+
+def unpack_np(layout: PackedLayout, buf: np.ndarray, dtype=None):
+    """Inverse of :func:`pack_np`: reshape views of the buffer back into the
+    layout's tree (leaves cast to the recorded dtypes, or ``dtype``)."""
+    leaves = []
+    for shape, dt, size, off in zip(layout.shapes, layout.dtypes,
+                                    layout.sizes, layout.offsets):
+        piece = np.asarray(buf[off:off + size]).reshape(shape)
+        leaves.append(piece.astype(dtype or dt, copy=False))
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
+def _layout_descriptor(layout: PackedLayout) -> bytes:
+    """Structure-only descriptor (treedef + shapes + dtypes, no array data):
+    what a receiver needs to rebuild the layout from a KIND_FULL message."""
+    return pickle.dumps((layout.treedef, layout.shapes, layout.dtypes))
+
+
+def _layout_from_descriptor(desc: bytes) -> PackedLayout:
+    treedef, shapes, dtypes = pickle.loads(desc)
+    return flatbuf._build_layout(treedef, shapes, dtypes, flatbuf.LANE,
+                                 flatbuf.ALIGN)
+
+
+# ---------------------------------------------------------------------------
+# Framing
+
+
+@dataclass(frozen=True)
+class WireMessage:
+    kind: int
+    epoch: int
+    layout_fp: bytes
+    aux: tuple
+    body: memoryview  # zero-copy view into the received blob
+
+
+def _encode(kind: int, body, aux: tuple = (), epoch: int = 0,
+            layout_fp: bytes = _ZERO_FP) -> bytes:
+    header = _HEADER.pack(MAGIC, VERSION, kind, len(aux), epoch, layout_fp,
+                          len(body))
+    auxb = struct.pack(f"<{len(aux)}d", *aux) if aux else b""
+    return b"".join((header, auxb, bytes(body)))
+
+
+def decode(blob) -> WireMessage:
+    """Parse a wire message; the body stays a zero-copy memoryview."""
+    view = memoryview(blob)
+    if len(view) < _HEADER.size:
+        raise WireFormatError(
+            f"wire message truncated: {len(view)} bytes < "
+            f"{_HEADER.size}-byte header")
+    magic, version, kind, n_aux, epoch, fp, body_len = \
+        _HEADER.unpack_from(view, 0)
+    if magic != MAGIC:
+        raise WireFormatError(f"bad wire magic {bytes(magic)!r}")
+    if version != VERSION:
+        raise WireFormatError(f"unsupported wire version {version}")
+    aux_off = _HEADER.size
+    body_off = aux_off + 8 * n_aux
+    if len(view) != body_off + body_len:
+        raise WireFormatError(
+            f"wire message length mismatch: header declares "
+            f"{body_off + body_len} bytes, got {len(view)}")
+    aux = struct.unpack_from(f"<{n_aux}d", view, aux_off) if n_aux else ()
+    return WireMessage(kind=kind, epoch=epoch, layout_fp=bytes(fp), aux=aux,
+                      body=view[body_off:])
+
+
+# ---------------------------------------------------------------------------
+# Tree payloads (_ser/_deser compatibility surface)
+
+
+def _encode_pickle_tree(tree) -> bytes:
+    """The legacy wire format (pickle + uncompressed npz), framed."""
+    buf = io.BytesIO()
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    np.savez(buf, *[np.asarray(x) for x in flat])
+    return _encode(KIND_PICKLE, pickle.dumps((buf.getvalue(), treedef)))
+
+
+def encode_tree(tree, codec: str = "packed", epoch: int = 0) -> bytes:
+    """Serialize a pytree: packed KIND_FULL when lossless (all-fp32 leaves),
+    legacy pickle fallback otherwise (or when ``codec='pickle'``)."""
+    if codec == "pickle" or not packable(tree):
+        return _encode_pickle_tree(tree)
+    layout = flatbuf.layout_of(tree)
+    return encode_full(layout, pack_np(layout, tree), epoch=epoch)
+
+
+def decode_tree(blob):
+    """Inverse of :func:`encode_tree` (jnp leaves, as the old ``_deser``)."""
+    msg = decode(blob)
+    if msg.kind == KIND_PICKLE:
+        data, treedef = pickle.loads(msg.body)
+        with np.load(io.BytesIO(data)) as z:
+            flat = [z[k] for k in z.files]
+        return jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(x) for x in flat])
+    if msg.kind == KIND_FULL:
+        layout, buf = decode_full(msg)
+        return jax.tree.map(jnp.asarray, unpack_np(layout, buf))
+    raise WireFormatError(
+        f"decode_tree got a kind-{msg.kind} message (delta/update messages "
+        f"need the session's pinned layout)")
+
+
+# ---------------------------------------------------------------------------
+# Packed params broadcast: FULL + XOR-DELTA
+
+
+def encode_full(layout: PackedLayout, buf: np.ndarray, epoch: int = 0) -> bytes:
+    """Full packed params: descriptor + raw buffer (sent at session start
+    and for resyncs)."""
+    desc = _layout_descriptor(layout)
+    body = struct.pack("<I", len(desc)) + desc + \
+        np.ascontiguousarray(buf, np.float32).tobytes()
+    return _encode(KIND_FULL, body, epoch=epoch,
+                   layout_fp=layout_fingerprint(layout))
+
+
+def decode_full(msg: WireMessage) -> tuple:
+    if msg.kind != KIND_FULL:
+        raise WireFormatError(f"expected KIND_FULL, got kind {msg.kind}")
+    if len(msg.body) < 4:
+        raise WireFormatError("KIND_FULL body truncated (no descriptor)")
+    (desc_len,) = struct.unpack_from("<I", msg.body, 0)
+    if len(msg.body) < 4 + desc_len:
+        raise WireFormatError("KIND_FULL descriptor truncated")
+    layout = _layout_from_descriptor(bytes(msg.body[4:4 + desc_len]))
+    if layout_fingerprint(layout) != msg.layout_fp:
+        raise WireFormatError(
+            "layout fingerprint in header does not match the descriptor "
+            "(tampered or corrupted message)")
+    raw = msg.body[4 + desc_len:]
+    if len(raw) != 4 * layout.total:
+        raise WireFormatError(
+            f"KIND_FULL buffer is {len(raw)} bytes, layout needs "
+            f"{4 * layout.total}")
+    return layout, np.frombuffer(raw, np.float32)
+
+
+def encode_delta(layout: PackedLayout, old_buf: np.ndarray,
+                 new_buf: np.ndarray, epoch: int) -> bytes:
+    """XOR of the fp32 words of two packed buffers: the per-round broadcast.
+    Applying it to the cached buffer reproduces the new one bit-exactly."""
+    delta = np.bitwise_xor(
+        np.ascontiguousarray(old_buf, np.float32).view(np.uint32),
+        np.ascontiguousarray(new_buf, np.float32).view(np.uint32))
+    return _encode(KIND_DELTA, delta.tobytes(), epoch=epoch,
+                   layout_fp=layout_fingerprint(layout))
+
+
+def apply_delta(layout: PackedLayout, cached: np.ndarray,
+                msg: WireMessage) -> np.ndarray:
+    if msg.kind != KIND_DELTA:
+        raise WireFormatError(f"expected KIND_DELTA, got kind {msg.kind}")
+    if msg.layout_fp != layout_fingerprint(layout):
+        raise WireFormatError(
+            "delta broadcast for a different packed layout")
+    if len(msg.body) != 4 * layout.total:
+        raise WireFormatError(
+            f"delta is {len(msg.body)} bytes, layout needs {4 * layout.total}")
+    delta = np.frombuffer(msg.body, np.uint32)
+    return np.bitwise_xor(
+        np.ascontiguousarray(cached, np.float32).view(np.uint32),
+        delta).view(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Masked-update upload
+
+
+def encode_update(layout: PackedLayout, buf: np.ndarray, loss: float,
+                  norm: float, epoch: int = 0) -> bytes:
+    """A handler's masked contribution: raw packed buffer + (loss, norm)."""
+    return _encode(KIND_UPDATE,
+                   np.ascontiguousarray(buf, np.float32).tobytes(),
+                   aux=(float(loss), float(norm)), epoch=epoch,
+                   layout_fp=layout_fingerprint(layout))
+
+
+def decode_update(msg: WireMessage, layout: PackedLayout) -> tuple:
+    """-> (fp32 (total,) view, loss, norm); rejects layout mismatches."""
+    if msg.kind != KIND_UPDATE:
+        raise WireFormatError(f"expected KIND_UPDATE, got kind {msg.kind}")
+    if msg.layout_fp != layout_fingerprint(layout):
+        raise WireFormatError(
+            "masked update does not match the aggregator's packed layout "
+            "(fingerprint mismatch)")
+    if len(msg.body) != 4 * layout.total:
+        raise WireFormatError(
+            f"masked update is {len(msg.body)} bytes, layout needs "
+            f"{4 * layout.total}")
+    if len(msg.aux) != 2:
+        raise WireFormatError(
+            f"masked update carries {len(msg.aux)} aux scalars, expected 2 "
+            f"(loss, norm)")
+    buf = np.frombuffer(msg.body, np.float32)
+    loss, norm = msg.aux
+    return buf, loss, norm

@@ -129,13 +129,23 @@ class Trainer:
             elastic=partial_sets)
         self._jit_step = jax.jit(self.train_step, donate_argnums=(0,))
 
-    def _active_for(self, step: int) -> np.ndarray:
+    def _active_for(self, step: int):
+        """This step's participation set, or ``None`` when no source of
+        partial participation is armed (no schedule, no membership layer,
+        no budgets) — i.e. the set is *statically* all-active. None is the
+        signal to omit the jit argument so the DP engine traces its
+        fixed-ring fast path; every consumer (ledger ``record``, metrics)
+        treats None as all-silos-contributed. The one place deciding this —
+        a new participation source added here is automatically honoured by
+        the step call."""
         if self.silo_schedule is not None:
             active = np.asarray(self.silo_schedule(step), bool)
         elif self.membership is not None:
             active = self.membership.active_at(step)
-        else:
+        elif self.accountant is not None and self.accountant.has_budgets():
             active = np.ones(self.n_silos, bool)
+        else:
+            return None  # statically all-active
         if self.accountant is not None and self.accountant.has_budgets():
             # budget verdicts override every membership source — a silo with
             # no budget left may not contribute even if scheduled
@@ -286,8 +296,8 @@ class Trainer:
                     and self.accountant.epsilon() >= self.tcfg.epsilon_budget):
                 break  # privacy budget exhausted: DP forbids further training
 
-            active = self._active_for(step)
-            if not active.any():
+            active = self._active_for(step)  # None = statically all-active
+            if active is not None and not active.any():
                 # every silo is out (budgets spent or membership empty):
                 # there is nothing DP allows to aggregate
                 break
@@ -300,8 +310,14 @@ class Trainer:
                 # fused tiers: simulated per-silo latencies for attribution
                 self.telemetry.observe_all(self.silo_latency_hook(step))
             t0 = time.time()
-            state, metrics = self._jit_step(state, batch, root_key,
-                                            jnp.asarray(active))
+            if active is None:
+                # statically all-active: omit the argument so the engine
+                # traces its fixed-ring fast path (no gating/ring work —
+                # bit-identical output)
+                state, metrics = self._jit_step(state, batch, root_key)
+            else:
+                state, metrics = self._jit_step(state, batch, root_key,
+                                                jnp.asarray(active))
             if self.tcfg.step_deadline_s is not None:
                 # a hard deadline needs true step time -> block per step
                 jax.block_until_ready(metrics)

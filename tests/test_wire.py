@@ -1,0 +1,410 @@
+"""Packed wire codec (core/tee/wire.py), vectorized channel crypto, delta
+broadcast + resync, pipelined rounds, signed spend reports, and the DP
+engine's static all-active fast path."""
+import hashlib
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PrivacyConfig
+from repro.core import barrier as barrier_mod, flatbuf
+from repro.core.dp_pipeline import DPPipeline, is_static_full
+from repro.core.noise_correction import NoiseState
+from repro.core.tee import channels, wire
+
+
+def tree_eq(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+
+
+# ---------------------------------------------------------------------------
+# codec round trips
+
+
+def test_packed_tree_roundtrip_bit_exact():
+    tree = {"w": jnp.linspace(-3, 7, 1234, dtype=jnp.float32).reshape(2, 617),
+            "b": jnp.zeros((5,), jnp.float32),
+            "nested": {"s": jnp.float32(2.5) * jnp.ones(())}}
+    blob = wire.encode_tree(tree)
+    assert wire.decode(blob).kind == wire.KIND_FULL
+    tree_eq(tree, wire.decode_tree(blob))
+
+
+def test_non_fp32_tree_takes_pickle_fallback():
+    tree = {"i": jnp.arange(7, dtype=jnp.int32),
+            "f": jnp.ones((3,), jnp.float32)}
+    blob = wire.encode_tree(tree)
+    assert wire.decode(blob).kind == wire.KIND_PICKLE
+    tree_eq(tree, wire.decode_tree(blob))
+
+
+def test_codec_roundtrip_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.integers(min_value=1, max_value=300), min_size=1,
+                    max_size=6),
+           st.integers(min_value=0, max_value=2 ** 31 - 1))
+    def roundtrip(sizes, seed):
+        rng = np.random.default_rng(seed)
+        tree = {f"l{i}": rng.standard_normal(n).astype(np.float32)
+                for i, n in enumerate(sizes)}
+        tree_eq(tree, wire.decode_tree(wire.encode_tree(tree)))
+        layout = flatbuf.layout_of(tree)
+        buf = wire.pack_np(layout, tree)
+        tree_eq(tree, wire.unpack_np(layout, buf))
+        up = wire.encode_update(layout, buf, 1.25, 2.5)
+        got, loss, norm = wire.decode_update(wire.decode(up), layout)
+        np.testing.assert_array_equal(got, buf)
+        assert (loss, norm) == (1.25, 2.5)
+
+    roundtrip()
+
+
+# ---------------------------------------------------------------------------
+# header hardening
+
+
+def test_header_tamper_truncation_and_mismatch_rejected():
+    tree = {"w": jnp.ones((256,), jnp.float32)}
+    layout = flatbuf.layout_of(tree)
+    blob = wire.encode_tree(tree)
+
+    with pytest.raises(wire.WireFormatError, match="magic"):
+        wire.decode(b"XXXX" + blob[4:])
+    with pytest.raises(wire.WireFormatError, match="truncated"):
+        wire.decode(blob[:10])
+    with pytest.raises(wire.WireFormatError, match="length mismatch"):
+        wire.decode(blob[:-4])  # truncated body vs declared length
+    with pytest.raises(wire.WireFormatError, match="length mismatch"):
+        wire.decode(blob + b"\x00")  # trailing garbage
+
+    # update for one layout must not decode against another
+    other = flatbuf.layout_of({"w": jnp.ones((4096,), jnp.float32)})
+    up = wire.encode_update(layout, wire.pack_np(layout, tree), 0.0, 0.0)
+    with pytest.raises(wire.WireFormatError, match="fingerprint"):
+        wire.decode_update(wire.decode(up), other)
+
+    # an update message missing its aux scalars is malformed, not loss=0
+    buf = wire.pack_np(layout, tree)
+    no_aux = wire._encode(wire.KIND_UPDATE, buf.tobytes(),
+                          layout_fp=wire.layout_fingerprint(layout))
+    with pytest.raises(wire.WireFormatError, match="aux"):
+        wire.decode_update(wire.decode(no_aux), layout)
+
+    # a FULL message whose header fingerprint disagrees with its descriptor
+    msg = wire.decode(blob)
+    forged = wire._HEADER.pack(wire.MAGIC, wire.VERSION, wire.KIND_FULL, 0,
+                               0, b"\x55" * 16, len(msg.body)) + \
+        bytes(msg.body)
+    with pytest.raises(wire.WireFormatError, match="fingerprint"):
+        wire.decode_full(wire.decode(forged))
+
+
+def test_delta_requires_matching_epoch_and_layout():
+    t0 = {"w": jnp.ones((128,), jnp.float32)}
+    layout = flatbuf.layout_of(t0)
+    b0 = wire.pack_np(layout, t0)
+    b1 = b0 + np.float32(0.5)
+    d = wire.encode_delta(layout, b0, b1, epoch=5)
+    msg = wire.decode(d)
+    np.testing.assert_array_equal(wire.apply_delta(layout, b0, msg), b1)
+    other = flatbuf.layout_of({"w": jnp.ones((4096,), jnp.float32)})
+    with pytest.raises(wire.WireFormatError, match="layout"):
+        wire.apply_delta(other, np.zeros(other.total, np.float32), msg)
+
+
+# ---------------------------------------------------------------------------
+# channel crypto: vectorized + legacy stacks
+
+
+def test_seal_open_both_versions_and_cross_open():
+    key = channels.derive_key(b"master", "chan")
+    pt = np.random.default_rng(3).bytes(100_000)
+    for ver in (channels.VER_FAST, channels.VER_LEGACY):
+        blob = channels.seal(key, pt, b"aad", version=ver)
+        assert blob[0] == ver
+        assert channels.open_sealed(key, blob, b"aad") == pt
+        tampered = blob[:-1] + bytes([blob[-1] ^ 1])
+        with pytest.raises(ValueError, match="authentication"):
+            channels.open_sealed(key, tampered, b"aad")
+    with pytest.raises(ValueError, match="truncated"):
+        channels.open_sealed(key, b"\x02" + b"x" * 20)
+    # the version byte is MACed: flipping it cannot downgrade the keystream
+    blob = channels.seal(key, pt, b"")
+    downgraded = bytes([channels.VER_LEGACY]) + blob[1:]
+    with pytest.raises(ValueError, match="authentication"):
+        channels.open_sealed(key, downgraded)
+
+
+def test_legacy_keystream_is_the_seed_construction():
+    """The benchmark baseline must really be the seed's keystream:
+    SHA-256(key || nonce || le64(counter)) per 32-byte block."""
+    key, nonce = b"k" * 32, b"n" * 16
+    ks = channels._keystream_legacy(key, nonce, 70)
+    expect = b"".join(
+        hashlib.sha256(key + nonce + struct.pack("<Q", c)).digest()
+        for c in range(3))[:70]
+    assert ks == expect
+
+
+def test_fast_keystream_deterministic_and_nonce_separated():
+    key = b"k" * 32
+    a = channels._keystream(key, b"n" * 16, 1024)
+    b = channels._keystream(key, b"n" * 16, 1024)
+    c = channels._keystream(key, b"m" * 16, 1024)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert len(channels._keystream(key, b"n" * 16, 0)) == 0
+
+
+# ---------------------------------------------------------------------------
+# session-level: delta broadcast, resync, pipelined rounds, signed reports
+
+
+def _session_fixture(codec="packed", n=4, sigma=0.05, budgets=None):
+    from repro.api import CollaborativeSession
+    from repro.configs.paper_models import MNIST_MLP3
+    from repro.data.synthetic import synthetic_mnist
+    from repro.models.small import build_small_model
+
+    train, _ = synthetic_mnist(n_train=128, n_test=16)
+    sm = build_small_model(MNIST_MLP3)
+    params = sm.init(jax.random.PRNGKey(1))
+    sess = CollaborativeSession.from_silos(
+        [{"x": jnp.asarray(s.x), "y": jnp.asarray(s.y)}
+         for s in train.split(n)],
+        PrivacyConfig(enabled=True, sigma=sigma, clip_bound=1.0),
+        codec=codec, params_template=params, silo_budgets=budgets)
+
+    def grad_fn(p, data):
+        return jax.value_and_grad(sm.loss)(p, data)
+
+    def update_fn(p, update, lr):
+        return jax.tree.map(lambda a, u: a - lr * u.astype(a.dtype),
+                            p, update)
+
+    return sess, params, grad_fn, update_fn
+
+
+def test_delta_broadcast_keeps_handler_params_bit_exact():
+    sess, params, grad_fn, update_fn = _session_fixture()
+    for t in range(3):
+        params, _ = sess.step(t, params, grad_fn, update_fn, lr=0.5)
+    layout = flatbuf.layout_of(params)
+    expect = wire.pack_np(layout, params)
+    for h in sess.handlers:
+        # after the round the handler's cache holds the params of the round
+        # it just computed on (one epoch behind the post-update params)
+        assert h._params_epoch == 3
+    # next round's broadcast brings them bit-equal to the updater's params
+    sess.step(3, params, grad_fn, update_fn, lr=0.0)
+    for h in sess.handlers:
+        np.testing.assert_array_equal(h._cached_buf, expect)
+
+
+def test_dropped_handler_resyncs_via_full_blob():
+    sess, params, grad_fn, update_fn = _session_fixture()
+    assert sess.wire_stats["resync_bytes"] == 0
+    params, _ = sess.step(0, params, grad_fn, update_fn, lr=0.5)
+    assert sess.drop_silo(1, step=1)
+    params, _ = sess.step(1, params, grad_fn, update_fn, lr=0.5)
+    params, _ = sess.step(2, params, grad_fn, update_fn, lr=0.5)
+    sess.rejoin_silo(1, step=3)
+    params, _ = sess.step(3, params, grad_fn, update_fn, lr=0.5)
+    # silo 1 missed epochs 2-3 -> its delta chain broke -> full resync
+    assert sess.wire_stats["resync_bytes"] > 0
+    assert sess.handlers[1]._params_epoch == 4
+    assert sess.accountant.contributions == [4, 3, 3, 4]
+
+
+def test_pipelined_run_matches_serial_bit_exact():
+    sess_a, params, grad_fn, update_fn = _session_fixture()
+    pa = params
+    losses_a = []
+    for t in range(4):
+        pa, l = sess_a.step(t, pa, grad_fn, update_fn, lr=0.5)
+        losses_a.append(l)
+    sess_b, _, _, _ = _session_fixture()
+    pb, losses_b = sess_b.run(params, grad_fn, update_fn, lr=0.5,
+                              n_rounds=4, pipelined=True)
+    tree_eq(pa, pb)
+    assert losses_a == losses_b
+    assert sess_b.wire_stats["rounds"] == 4
+    assert sess_a.wire_stats == sess_b.wire_stats
+
+
+def test_pickle_codec_still_works_end_to_end():
+    sess, params, grad_fn, update_fn = _session_fixture(codec="pickle")
+    losses = []
+    for t in range(3):
+        params, l = sess.step(t, params, grad_fn, update_fn, lr=0.5)
+        losses.append(l)
+    assert losses[-1] < losses[0]
+    # pickle baseline: full params blob unicast per handler, no broadcast
+    assert sess.wire_stats["broadcast_bytes"] > 0
+    assert sess.handlers[0]._cached_buf is None  # no packed cache
+
+
+def test_wire_config_joins_attestation_measurement():
+    """Sessions pinning different packed layouts (or codec ids) measure
+    differently; a handler launched under a tampered wire config fails the
+    KDS gate."""
+    from repro.core.tee.channels import derive_key
+    from repro.core.tee.components import DataHandler, ManagementService
+
+    priv = PrivacyConfig(enabled=True, sigma=0.5)
+    a, b, c = ManagementService(), ManagementService(), ManagementService()
+    a.create_session("s", 2, priv, wire_config={"codec": wire.WIRE_CODEC_ID,
+                                                "layout": "aa" * 16})
+    b.create_session("s", 2, priv, wire_config={"codec": wire.WIRE_CODEC_ID,
+                                                "layout": "bb" * 16})
+    c.create_session("s", 2, priv, wire_config={"codec": wire.WIRE_CODEC_ID,
+                                                "layout": "aa" * 16})
+    assert a.expected_measurement() != b.expected_measurement()
+    assert a.expected_measurement() == c.expected_measurement()
+
+    good = DataHandler("h-good", a, silo_idx=0)
+    bad = DataHandler("h-bad", a, silo_idx=1)
+    bad.launch_wire_config = {"codec": "pickle-npz-v0"}  # tampered codec
+    good.attest(a.policy)
+    bad.attest(a.policy)
+    a.kds.upload_key("dk", derive_key(b"r", "dk"), "owner",
+                     a.expected_measurement(), a.policy.hash())
+    assert a.kds.request_key("dk", good.report)
+    with pytest.raises(PermissionError):
+        a.kds.request_key("dk", bad.report)
+
+
+def test_handler_rejects_broadcast_for_unpinned_layout():
+    sess, params, grad_fn, update_fn = _session_fixture()
+    params, _ = sess.step(0, params, grad_fn, update_fn, lr=0.5)
+    h = sess.handlers[0]
+    wrong = {"w": jnp.ones((4096,), jnp.float32)}
+    blob = wire.encode_tree(wrong)  # a FULL message for a different model
+    with pytest.raises(wire.WireFormatError, match="attested session layout"):
+        h._sync_params(blob)
+
+
+def test_signed_spend_report_verifies_and_detects_tamper():
+    from repro.analysis.report import privacy_spend_table, verify_spend_report
+
+    sess, params, grad_fn, update_fn = _session_fixture(
+        budgets={1: 0.001})
+    for t in range(2):
+        params, _ = sess.step(t, params, grad_fn, update_fn, lr=0.5)
+    report = sess.privacy_report()
+    att = sess.service.attestation
+    assert verify_spend_report(report, att)
+    # survives a strict-JSON round trip (what --spend-report writes)
+    import json
+    assert verify_spend_report(json.loads(json.dumps(report)), att)
+    assert "signature: VERIFIED" in privacy_spend_table(report,
+                                                        attestation=att)
+    # without the root of trust the signature is surfaced, not verified
+    assert "signature: present" in privacy_spend_table(report)
+    # the hardware-root signature is NOT in the JSON: a driver holding only
+    # the report cannot re-derive the signing key
+    assert "signature" not in report["signature"]["signer"]
+    # tampering with the spend data breaks the signature...
+    forged = json.loads(json.dumps(report))
+    forged["silos"][1]["exhausted"] = False
+    assert not verify_spend_report(forged, att)
+    # ...as does tampering with the claimed signer identity
+    forged2 = json.loads(json.dumps(report))
+    forged2["signature"]["signer"]["code_measurement"] = "0" * 64
+    assert not verify_spend_report(forged2, att)
+    # a *different* attested party (a data handler) re-signing a tampered
+    # body under its own identity must not verify either: the signer claim
+    # is pinned to the admin's component (and optionally its measurement)
+    from repro.core.tee.channels import spend_report_mac
+    h = sess.handlers[0]
+    body = {k: v for k, v in report.items() if k != "signature"}
+    body["silos"] = []
+    forged3 = dict(body)
+    forged3["signature"] = {
+        "scheme": "hmac-sha256/attestation-identity",
+        "hmac": spend_report_mac(body, h.report.signature),
+        "signer": {"component": h.report.component,
+                   "code_measurement": h.report.code_measurement,
+                   "policy_hash": h.report.policy_hash,
+                   "nonce": h.report.nonce}}
+    assert not verify_spend_report(forged3, att)
+    # measurement pinning: the genuine report passes it, a wrong pin fails
+    expected = sess.service.expected_measurement()
+    assert verify_spend_report(report, att, expected_measurement=expected)
+    assert not verify_spend_report(report, att, expected_measurement="0" * 64)
+    # and an unsigned report is simply not verified
+    assert not verify_spend_report({"steps": 1}, att)
+
+
+def test_untrusted_storage_keyerror_names_asset():
+    from repro.core.tee.components import UntrustedStorage
+
+    s = UntrustedStorage()
+    s.put("present", b"x")
+    with pytest.raises(KeyError, match="unknown asset 'missing'"):
+        s.get("missing")
+
+
+# ---------------------------------------------------------------------------
+# static all-active fast path (dp_pipeline satellite)
+
+
+def test_static_full_detection():
+    assert is_static_full(None)
+    assert is_static_full(jnp.ones((4,), jnp.bool_))
+    assert is_static_full(np.ones(4, bool))
+    assert not is_static_full(jnp.array([True, False, True, True]))
+    traced = jax.jit(lambda a: jnp.asarray(is_static_full(a), jnp.bool_))
+    assert not bool(traced(jnp.ones((4,), jnp.bool_)))  # traced -> dynamic
+
+
+def test_static_fast_path_bit_identical_to_dynamic():
+    """The fixed-ring fast path must produce exactly the dynamic graph's
+    output for an all-active set — eagerly and under jit (where the
+    participation set is a trace-time constant vs a traced argument)."""
+    N = 4
+    priv = PrivacyConfig(enabled=True, sigma=0.5, clip_bound=1.0,
+                         noise_lambda=0.7)
+    t = {"w": jnp.ones((5000,), jnp.float32), "b": jnp.ones((63,))}
+    layout = flatbuf.layout_of(t)
+    pipe = DPPipeline(priv, layout, N)
+    keys = barrier_mod.step_keys(jax.random.PRNGKey(9),
+                                 jnp.zeros((), jnp.int32))
+    ns = NoiseState(prev_key=jnp.array([7, 8], jnp.uint32),
+                    has_prev=jnp.ones((), jnp.bool_),
+                    prev_active=jnp.ones((N,), jnp.bool_))
+    full = jnp.ones((N,), jnp.bool_)
+    g = jnp.full((layout.total,), 0.25, jnp.float32)
+
+    # jit with the set as a constant (static path) vs as an argument
+    noise_static = jax.jit(
+        lambda st: pipe.corrected_noise_packed(g, keys, st, 1.0, full))(ns)
+    noise_dyn = jax.jit(
+        lambda a, st: pipe.corrected_noise_packed(g, keys, st, 1.0, a))(
+            full, ns)
+    np.testing.assert_array_equal(np.asarray(noise_static),
+                                  np.asarray(noise_dyn))
+
+    for i in range(N):
+        c_static = jax.jit(
+            lambda st, s=i: pipe.silo_contribution(t, s, 0.9, full, keys,
+                                                   st, 1.0))(ns)
+        c_dyn = jax.jit(
+            lambda a, st, s=i: pipe.silo_contribution(t, s, 0.9, a, keys,
+                                                      st, 1.0))(full, ns)
+        np.testing.assert_array_equal(np.asarray(c_static),
+                                      np.asarray(c_dyn))
+
+    # ring neighbour: static == dynamic for every silo
+    for i in range(N):
+        assert int(pipe.next_active(i, full)) == \
+            int(pipe.next_active(i, jnp.asarray(np.ones(N, bool))))
+        assert int(pipe.next_active(i, full)) == (i + 1) % N
