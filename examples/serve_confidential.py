@@ -1,12 +1,18 @@
 """Confidential serving example: load (encrypted) weights via the KDS gate,
-then serve them through a ``repro.api.Session`` (batched prefill + greedy
-decode with the KV cache).
+then serve them through ``Session.serve`` with the continuous-batching
+scheduler — isolation between requests is enforced in the paged-attention
+kernel (block-table indirection + in-kernel zeroing of recycled slots), so
+slot recycling is safe rather than forbidden. The wave baseline runs the
+same requests for comparison.
 
     PYTHONPATH=src python examples/serve_confidential.py
 """
+import copy
+
 import jax
 
 from repro.api import Session
+from repro.runtime.serving import zipf_requests
 from repro.core.tee.attestation import LaunchPolicy
 from repro.core.tee.channels import derive_key, open_sealed, seal
 from repro.core.tee.components import Component, ManagementService, _deser, _ser
@@ -29,8 +35,20 @@ key = svc.kds.request_key("model-v1", server.report)
 params = _deser(open_sealed(key, svc.storage.get("model-v1")))
 print("server attested; weights decrypted inside the trust domain")
 
-# --- batched serve through the session façade -------------------------------
-res = sess.serve(batch_size=4, prompt_len=32, max_new_tokens=16, params=params)
-print(f"prefill(4x32): {res.prefill_s * 1e3:.1f} ms")
-print(f"decode: {res.decode_s_per_token * 1e3:.2f} ms/token")
-print("generated:", res.tokens[:2].tolist())
+# --- serve through the session façade: continuous vs wave -------------------
+# a realistic heavy-tailed workload: many short prompts, a few long ones
+reqs = zipf_requests(16, sess.cfg.vocab_size, max_len=48,
+                     max_new_low=4, max_new_high=24, seed=7)
+
+res = sess.serve(scheduler="continuous", requests=copy.deepcopy(reqs),
+                 params=params, max_batch=4, max_len=96)
+base = sess.serve(scheduler="wave", requests=copy.deepcopy(reqs),
+                  params=params, max_batch=4, max_len=96)
+
+print(f"{len(reqs)} requests, 4 slots — continuous (paged, slot-recycled) "
+      f"vs wave (fresh cache per wave):")
+for name, s in (("continuous", res.stats), ("wave", base.stats)):
+    print(f"  {name:11s} utilization={s.utilization:.3f} "
+          f"p50={s.p50_latency_steps:.0f} p99={s.p99_latency_steps:.0f} "
+          f"steps ({s.useful_tokens} tokens)")
+print("generated (continuous):", res.tokens[:2, :8].tolist())

@@ -56,10 +56,14 @@ class TrainResult:
 class ServeResult:
     """Greedy-decoded tokens + wall-clock timings."""
 
-    tokens: np.ndarray  # (B, max_new_tokens) int32
+    tokens: np.ndarray  # (B, max_new_tokens) int32; -1-padded in scheduler mode
     prefill_s: float
     decode_s_per_token: float
     logits: Any = None  # final-step logits (B, V)
+    # scheduler mode only: the ServerStats (utilization, p50/p99 latency)
+    # and the completed Request objects
+    stats: Any = None
+    requests: Any = None
 
 
 @dataclass
@@ -204,8 +208,21 @@ class Session:
 
     # ----------------------------------------------------------------- serve
     def serve(self, *, batch_size: int = 4, prompt_len: int = 32,
-              max_new_tokens: int = 16, prompt=None, params=None) -> ServeResult:
-        """Batched prefill + greedy decode with the KV cache.
+              max_new_tokens: int = 16, prompt=None, params=None,
+              scheduler: Optional[str] = None, requests=None,
+              max_batch: int = 8, max_len: int = 512, page_size: int = 16,
+              prefill_chunk: int = 16) -> ServeResult:
+        """Greedy decoding, three ways.
+
+        ``scheduler=None`` (default): the direct batched prefill + decode
+        path with wall-clock timings — one cache, every row in lockstep.
+        ``scheduler='wave'``: the length-bucketed WaveServer baseline.
+        ``scheduler='continuous'``: continuous batching over the paged,
+        slot-recycled KV cache (transformer families only). Scheduler modes
+        take a ``requests`` list (``runtime.serving.Request``); without one,
+        ``batch_size`` uniform requests of ``prompt_len`` are synthesized.
+        Both scheduler modes fill ``ServeResult.stats`` with comparable
+        utilization and p50/p99 latency tails.
 
         ``params`` lets callers bring externally-loaded weights (e.g.
         decrypted through the KDS gate); fresh random init otherwise.
@@ -216,6 +233,12 @@ class Session:
             raise ValueError(f"{cfg.name} is encoder-only: no decode step")
         params = params if params is not None else self.model.init(
             jax.random.PRNGKey(self.seed))
+        if scheduler is not None:
+            return self._serve_scheduled(
+                scheduler, params, requests, batch_size=batch_size,
+                prompt_len=prompt_len, max_new_tokens=max_new_tokens,
+                max_batch=max_batch, max_len=max_len, page_size=page_size,
+                prefill_chunk=prefill_chunk)
         if prompt is None:
             prompt = jax.random.randint(jax.random.PRNGKey(self.seed + 1),
                                         (batch_size, prompt_len), 0,
@@ -248,6 +271,43 @@ class Session:
 
         return ServeResult(tokens=np.stack(out, 1), prefill_s=prefill_s,
                            decode_s_per_token=decode_s, logits=logits)
+
+    def _serve_scheduled(self, scheduler: str, params, requests, *,
+                         batch_size: int, prompt_len: int,
+                         max_new_tokens: int, max_batch: int, max_len: int,
+                         page_size: int, prefill_chunk: int) -> ServeResult:
+        from repro.runtime.serving import (ContinuousServer, Request,
+                                           WaveServer)
+
+        if requests is None:
+            rng = np.random.default_rng(self.seed + 1)
+            requests = [Request(rid=i,
+                                prompt=rng.integers(0, self.cfg.vocab_size,
+                                                    prompt_len).astype(np.int32),
+                                max_new_tokens=max_new_tokens)
+                        for i in range(batch_size)]
+        if scheduler == "wave":
+            srv = WaveServer(self.model, params, max_batch=max_batch,
+                             max_len=max_len)
+        elif scheduler == "continuous":
+            srv = ContinuousServer(self.model, params, max_batch=max_batch,
+                                   max_len=max_len, page_size=page_size,
+                                   prefill_chunk=prefill_chunk)
+        else:
+            raise ValueError(
+                f"unknown scheduler {scheduler!r}: wave | continuous")
+        for r in requests:
+            srv.submit(r)
+        t0 = time.perf_counter()
+        stats = srv.run_until_drained()
+        wall = time.perf_counter() - t0
+        width = max((len(r.generated) for r in requests), default=0)
+        tokens = np.full((len(requests), width), -1, np.int32)
+        for i, r in enumerate(requests):
+            tokens[i, :len(r.generated)] = r.generated
+        return ServeResult(tokens=tokens, prefill_s=0.0,
+                           decode_s_per_token=wall / max(stats.useful_tokens, 1),
+                           stats=stats, requests=requests)
 
     # --------------------------------------------------------- introspection
     def kernel_impls(self) -> dict:
@@ -404,6 +464,42 @@ class CollaborativeSession:
         return self.membership.rejoin(
             silo, step=self._next_round if step is None else step,
             override=override)
+
+    def rejoin_silo_async(self, silo: int, override: bool = False) -> bool:
+        """Mid-round rejoin: the dropped owner's handler re-attests, gets its
+        channel key re-released through the KDS and is warm-resynced to the
+        *current* params epoch NOW — while the in-flight round keeps running
+        without it — then enters the participation set at the next round
+        start. Contrast with :meth:`rejoin_silo`, which only flips membership
+        and leaves the handler to hit :class:`StaleParamsError` (and pay a
+        blocking full resync) inside its first round back. The warm resync
+        rides the same epoch-tagged wire path, so a handler that somehow
+        missed it still degrades to the in-round resync rather than applying
+        a stale delta."""
+        from repro.core.tee.channels import SecureChannel, VER_FAST, VER_LEGACY
+
+        if not self.membership.rejoin(silo, step=self._next_round,
+                                      override=override):
+            return False
+        h = self.handlers[silo]
+        # fresh attestation against the live policy: a handler whose
+        # measurement drifted while it was out gets no key, and therefore
+        # no channel — the rejoin fails closed
+        h.attest(self.service.policy)
+        key = self.service.kds.request_key(f"dk-{silo}", h.report)
+        ver = VER_FAST if self.codec == "packed" else VER_LEGACY
+        # both channel ends are rebuilt so the replay counters restart in
+        # sync (the dropped handler's old counters are gone with its session)
+        h.channel = SecureChannel(key, h.name, version=ver)
+        self.updater.channels[h.name] = SecureChannel(key, h.name, version=ver)
+        if self._bcast_buf is not None:
+            # warm resync at the current epoch: the next round's delta
+            # broadcast (epoch + 1) chains cleanly instead of raising
+            # StaleParamsError on the round's critical path
+            blob = self._resync_blob()
+            self.wire_stats["resync_bytes"] += len(blob)
+            h._sync_params(blob)
+        return True
 
     @property
     def _next_round(self) -> int:

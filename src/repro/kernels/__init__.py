@@ -1,6 +1,6 @@
 """Kernel packages + the shared dispatch registry.
 
-Importing this package registers every kernel variant (the five ops modules)
+Importing this package registers every kernel variant (the seven ops modules)
 with :data:`repro.kernels.dispatch.REGISTRY`, so introspection
 (``available_impls``) sees the full table. Selection overrides: the
 ``force_impl`` context manager and the ``REPRO_KERNEL_IMPL`` env var — see
@@ -12,6 +12,7 @@ from repro.kernels.dp_clip import ops as dp_clip_ops
 from repro.kernels.dp_fused import ops as dp_fused_ops
 from repro.kernels.flash_attention import ops as flash_attention_ops
 from repro.kernels.mamba2 import ops as mamba2_ops
+from repro.kernels.paged_attention import ops as paged_attention_ops
 from repro.kernels.rwkv6 import ops as rwkv6_ops
 from repro.kernels.zsmask import ops as zsmask_ops
 
@@ -31,6 +32,7 @@ __all__ = [
     "dp_fused_ops",
     "flash_attention_ops",
     "mamba2_ops",
+    "paged_attention_ops",
     "rwkv6_ops",
     "zsmask_ops",
 ]

@@ -1,0 +1,1 @@
+"""Paged attention: block-table KV indirection + in-kernel slot zeroing."""

@@ -1,0 +1,77 @@
+"""Public paged-attention API, routed through the kernel-dispatch registry.
+
+Two kernels back the serving subsystem:
+
+* ``paged_attention`` — block-table attention read path.
+  ``impl='auto'``: Pallas on TPU; the vectorized gather path on compiled
+  CPU. The unrolled jnp oracle is explicit-request only (``impl='jnp'``) —
+  it exists to pin the Pallas kernel bitwise in the parity tests.
+* ``paged_reset`` — in-kernel zeroing of a slot's pages on admission (the
+  leak-freedom half of the contract). Pallas in-place aliasing on TPU, a
+  scatter of zeros elsewhere.
+"""
+from __future__ import annotations
+
+from repro.kernels.dispatch import REGISTRY, kernel_variant, on_tpu
+from repro.kernels.paged_attention import ref
+from repro.kernels.paged_attention.paged_attention import (
+    paged_attention_pallas, paged_reset_pallas)
+
+KERNEL = "paged_attention"
+RESET_KERNEL = "paged_reset"
+
+
+@kernel_variant(KERNEL, "pallas", priority=100,
+                auto_predicate=lambda ctx: ctx["on_tpu"],
+                doc="block-table Pallas kernel (interpret mode off-TPU)")
+def _pallas(q, k_pages, v_pages, tables, q_start):
+    return paged_attention_pallas(q, k_pages, v_pages, tables, q_start,
+                                  interpret=not on_tpu())
+
+
+@kernel_variant(KERNEL, "gather", priority=50,
+                doc="vectorized gather + masked softmax (compiled CPU path)")
+def _gather(q, k_pages, v_pages, tables, q_start):
+    return ref.paged_attention_gather(q, k_pages, v_pages, tables, q_start)
+
+
+@kernel_variant(KERNEL, "jnp", priority=10,
+                auto_predicate=lambda ctx: False,
+                doc="unrolled bit-exact oracle (explicit request only)")
+def _jnp(q, k_pages, v_pages, tables, q_start):
+    return ref.paged_attention_oracle(q, k_pages, v_pages, tables, q_start)
+
+
+def paged_attention(q, k_pages, v_pages, tables, q_start, impl: str = "auto"):
+    """Attention for C new tokens per slot against the slot's paged KV.
+
+    q: (B, C, Hq, D); k_pages/v_pages: (N, P, Hkv, D); tables: (B, nP) i32;
+    q_start: (B,) i32 tokens already cached (q row c reads positions
+    <= q_start + c). Returns fp32 (B, C, Hq, D)."""
+    return REGISTRY.dispatch(KERNEL, impl,
+                             {"C": q.shape[1], "P": k_pages.shape[1]},
+                             q, k_pages, v_pages, tables, q_start)
+
+
+@kernel_variant(RESET_KERNEL, "pallas", priority=100,
+                auto_predicate=lambda ctx: ctx["on_tpu"],
+                doc="in-place page zeroing via input_output_aliases")
+def _reset_pallas(k_pages, v_pages, row):
+    return paged_reset_pallas(k_pages, v_pages, row, interpret=not on_tpu())
+
+
+@kernel_variant(RESET_KERNEL, "jnp", priority=50,
+                doc="scatter-of-zeros reference")
+def _reset_jnp(k_pages, v_pages, row):
+    return ref.paged_reset_ref(k_pages, v_pages, row)
+
+
+def paged_reset(k_pages, v_pages, row, impl: str = "auto"):
+    """Zero the pages in block-table row ``row`` (shape (nP,) i32) across the
+    stacked (L, N, P, H, D) pools; returns the new (k_pages, v_pages).
+
+    Treat the input pools as CONSUMED: the Pallas path donates them for the
+    in-place alias, so callers must rebind (``pool = paged_reset(*pool, row)``)
+    rather than keep using the old arrays."""
+    return REGISTRY.dispatch(RESET_KERNEL, impl, {"nP": row.shape[0]},
+                             k_pages, v_pages, row)

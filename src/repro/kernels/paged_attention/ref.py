@@ -1,0 +1,84 @@
+"""Reference implementations for the paged-attention kernels.
+
+``paged_attention_oracle`` mirrors the Pallas kernel page-for-page with the
+*shared* ``_page_step``/``_mask`` helpers and runs fully jitted, so the
+parity tests assert bitwise equality (see the bit-identity contract in
+``paged_attention.py``). ``paged_attention_gather`` is the production
+compiled-CPU path: one gather + one materialized softmax, numerically
+equivalent but not bit-identical to the online-softmax recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.paged_attention import (NEG_INF,
+                                                           _fold_padded,
+                                                           _mask, _page_step,
+                                                           _unfold)
+
+
+@jax.jit
+def paged_attention_oracle(q, k_pages, v_pages, tables, q_start):
+    """The kernel's grid unrolled as python loops over (slot, kv head, page)
+    inside one jit — same helpers, same op sequence, bit-equal output.
+    Test-sized pools only (compile time is cubic in the unroll)."""
+    B, C, Hq, D = q.shape
+    _, P, Hkv, _ = k_pages.shape
+    nP = tables.shape[1]
+    qt, GC, GCp = _fold_padded(q, B, C, Hq, Hkv, D)
+    sm_scale = 1.0 / D ** 0.5
+
+    res = []
+    for b in range(B):
+        heads = []
+        for h in range(Hkv):
+            qf = qt[b, h].astype(jnp.float32)
+            m = jnp.full((GCp, 1), NEG_INF, jnp.float32)
+            l = jnp.zeros((GCp, 1), jnp.float32)
+            acc = jnp.zeros((GCp, D), jnp.float32)
+            for j in range(nP):
+                page = tables[b, j]
+                k = k_pages[page, :, h].astype(jnp.float32)
+                v = v_pages[page, :, h].astype(jnp.float32)
+                mask = _mask(q_start[b], j, P, C, GCp)
+                m, l, acc = _page_step(qf, k, v, m, l, acc, mask, sm_scale)
+            heads.append((acc / jnp.maximum(l, 1e-30))[:GC])
+        res.append(jnp.stack(heads))
+    return _unfold(jnp.stack(res), B, C, Hq, Hkv, D)
+
+
+@jax.jit
+def paged_attention_gather(q, k_pages, v_pages, tables, q_start):
+    """Vectorized jnp path: gather the slot's pages into a contiguous
+    (B, nP*P) view, then one masked GQA softmax. O(nP*P) score memory per
+    query — fine for serving-sized pools, and XLA fuses the gather."""
+    B, C, Hq, D = q.shape
+    _, P, Hkv, _ = k_pages.shape
+    nP = tables.shape[1]
+    G = Hq // Hkv
+    S = nP * P
+    k = k_pages[tables].reshape(B, S, Hkv, D)  # (B, nP, P, Hkv, D) -> flat
+    v = v_pages[tables].reshape(B, S, Hkv, D)
+    qg = q.reshape(B, C, Hkv, G, D).astype(jnp.float32)
+    scores = jnp.einsum("bchgd,bkhd->bhgck", qg,
+                        k.astype(jnp.float32)) * (1.0 / D ** 0.5)
+    qpos = q_start[:, None] + jnp.arange(C)[None, :]          # (B, C)
+    kvpos = jnp.arange(S)
+    mask = kvpos[None, None] <= qpos[:, :, None]              # (B, C, S)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    # NEG_INF is finite: fully-masked rows (inactive slots) come out as a
+    # finite uniform average the host ignores, mirroring the kernel
+    out = jnp.einsum("bhgck,bkhd->bchgd", p / jnp.maximum(l, 1e-30),
+                     v.astype(jnp.float32))
+    return out.reshape(B, C, Hq, D)
+
+
+@jax.jit
+def paged_reset_ref(k_pages, v_pages, row):
+    """Zero block-table row ``row``'s pages in the stacked (L, N, P, H, D)
+    pools. Duplicate page ids in the row are fine (idempotent zero)."""
+    return (k_pages.at[:, row].set(0.0), v_pages.at[:, row].set(0.0))

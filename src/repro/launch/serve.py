@@ -1,7 +1,10 @@
 """Confidential serving launcher: prefill + batched decode with the KV cache
 (``python -m repro.launch.serve --arch <id> --tokens 32``).
 
-Thin CLI over :meth:`repro.api.Session.serve`. Same trust boundaries as
+Thin CLI over :meth:`repro.api.Session.serve`. ``--scheduler`` picks the
+serving mode: ``direct`` (one lockstep batch, wall-clock timings), ``wave``
+(length-bucketed static batching, the measured baseline) or ``continuous``
+(paged KV cache with in-kernel slot recycling). Same trust boundaries as
 training (attested components, encrypted assets); DP is a training-time
 mechanism so the barrier is N/A here (DESIGN.md §5).
 """
@@ -16,21 +19,45 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="requests (scheduler modes) / batch rows (direct)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--scheduler", default="direct",
+                    choices=["direct", "wave", "continuous"])
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="batch slots for the scheduler modes")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
     args = ap.parse_args()
 
     sess = Session.from_config(args.arch, full=args.full)
     if not sess.cfg.causal:
         raise SystemExit(f"{sess.cfg.name} is encoder-only: no decode step")
-    res = sess.serve(batch_size=args.batch, prompt_len=args.prompt_len,
-                     max_new_tokens=args.tokens)
 
-    print(f"arch={sess.cfg.name} batch={args.batch} prompt={args.prompt_len} "
-          f"gen={args.tokens}")
-    print(f"prefill: {res.prefill_s * 1e3:.1f} ms | decode: "
-          f"{res.decode_s_per_token * 1e3:.2f} ms/token")
+    if args.scheduler == "direct":
+        res = sess.serve(batch_size=args.batch, prompt_len=args.prompt_len,
+                         max_new_tokens=args.tokens)
+        print(f"arch={sess.cfg.name} batch={args.batch} "
+              f"prompt={args.prompt_len} gen={args.tokens}")
+        print(f"prefill: {res.prefill_s * 1e3:.1f} ms | decode: "
+              f"{res.decode_s_per_token * 1e3:.2f} ms/token")
+        print("first sequences:", res.tokens[:2, :8].tolist())
+        return
+
+    res = sess.serve(batch_size=args.batch, prompt_len=args.prompt_len,
+                     max_new_tokens=args.tokens, scheduler=args.scheduler,
+                     max_batch=args.max_batch,
+                     max_len=args.prompt_len + args.tokens,
+                     page_size=args.page_size,
+                     prefill_chunk=args.prefill_chunk)
+    s = res.stats
+    print(f"arch={sess.cfg.name} scheduler={args.scheduler} "
+          f"requests={args.batch} slots={args.max_batch}")
+    print(f"useful tokens: {s.useful_tokens} | decode steps: "
+          f"{s.decode_steps} | utilization: {s.utilization:.3f}")
+    print(f"latency (steps): p50={s.p50_latency_steps:.0f} "
+          f"p99={s.p99_latency_steps:.0f}")
     print("first sequences:", res.tokens[:2, :8].tolist())
 
 

@@ -136,3 +136,51 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_entries: int,
         "v": jnp.zeros(shape, dtype),
         "len": jnp.zeros((n_entries,), jnp.int32),
     }
+
+
+# ---------------------------------------------------------------------------
+# paged KV (serving): per-slot block tables over a shared page pool
+
+
+def init_paged_pool(cfg: ModelConfig, n_pages: int, page_size: int,
+                    n_entries: int, dtype=jnp.float32) -> dict:
+    """Shared page pool for ``n_entries`` layers: requests own disjoint sets
+    of pages via block tables instead of contiguous per-request caches, so a
+    finished request's pages recycle into any slot (after the in-kernel
+    zeroing — see kernels/paged_attention)."""
+    shape = (n_entries, n_pages, page_size, cfg.n_kv_heads, cfg.d_head)
+    return {"k_pages": jnp.zeros(shape, dtype), "v_pages": jnp.zeros(shape, dtype)}
+
+
+def paged_kv_write(k_pages, v_pages, k, v, tables, q_start, n_valid):
+    """Scatter a (B, C, Hkv, Dh) chunk of fresh K/V into the slots' own
+    pages. Rows past ``n_valid`` scatter to page id N (one past the pool) and
+    are dropped, so inactive slots and prompt padding write nothing."""
+    N, P = k_pages.shape[0], k_pages.shape[1]
+    B, C = k.shape[0], k.shape[1]
+    pos = q_start[:, None] + jnp.arange(C)[None, :]            # (B, C)
+    valid = jnp.arange(C)[None, :] < n_valid[:, None]
+    page = jnp.take_along_axis(tables, jnp.clip(pos // P, 0, tables.shape[1] - 1),
+                               axis=1)
+    page = jnp.where(valid, page, N)                           # OOB -> dropped
+    off = pos % P
+    k_pages = k_pages.at[page, off].set(k.astype(k_pages.dtype), mode="drop")
+    v_pages = v_pages.at[page, off].set(v.astype(v_pages.dtype), mode="drop")
+    return k_pages, v_pages
+
+
+def attn_apply_paged(p, x, cfg: ModelConfig, positions, k_pages, v_pages,
+                     tables, q_start, n_valid):
+    """Paged-cache attention step: write the chunk's K/V through the block
+    table, then read the whole slot back through the paged kernel. Returns
+    (out, k_pages, v_pages). The write precedes the read, so query row c at
+    position q_start + c sees itself (mask ``kvpos <= q_start + c``)."""
+    from repro.kernels.paged_attention import ops as paged_ops
+
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    k_pages, v_pages = paged_kv_write(k_pages, v_pages, k, v, tables,
+                                      q_start, n_valid)
+    out = paged_ops.paged_attention(q, k_pages, v_pages, tables, q_start)
+    out = out.astype(x.dtype).reshape(B, S, cfg.attn_inner)
+    return out @ p["wo"].astype(x.dtype), k_pages, v_pages

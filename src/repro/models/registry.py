@@ -10,7 +10,7 @@ batch dicts:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax.numpy as jnp
 
@@ -26,6 +26,12 @@ class Model:
     init_cache: Callable[..., Any]
     prefill: Callable[..., Any]
     decode_step: Callable[..., Any]
+    # paged serving surface (transformer families only; None elsewhere):
+    # init_paged_cache(n_pages, page_size) -> pool pytree;
+    # paged_step(params, tokens, pool, tables, q_start, n_valid)
+    #   -> (logits, pool) — one function for both prefill chunks and decode
+    init_paged_cache: Optional[Callable[..., Any]] = None
+    paged_step: Optional[Callable[..., Any]] = None
 
 
 def build_model(cfg: ModelConfig, param_dtype=jnp.float32,
@@ -39,6 +45,11 @@ def build_model(cfg: ModelConfig, param_dtype=jnp.float32,
             init_cache=lambda batch, max_len: transformer.init_cache(cfg, batch, max_len, compute_dtype),
             prefill=lambda p, b, c: transformer.prefill(p, cfg, b, c, compute_dtype),
             decode_step=lambda p, b, c: transformer.decode_step(p, cfg, b, c, compute_dtype),
+            init_paged_cache=lambda n_pages, page_size: transformer.init_paged_cache(
+                cfg, n_pages, page_size, compute_dtype),
+            paged_step=lambda p, toks, pool, tables, q_start, n_valid:
+                transformer.forward_paged(p, cfg, toks, pool, tables,
+                                          q_start, n_valid, compute_dtype),
         )
     if cfg.family == "ssm":
         return Model(

@@ -137,6 +137,57 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return attn.init_kv_cache(cfg, batch, max_len, cfg.n_layers, dtype)
 
 
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=jnp.bfloat16):
+    return attn.init_paged_pool(cfg, n_pages, page_size, cfg.n_layers, dtype)
+
+
+def layer_apply_paged(p, x, cfg: ModelConfig, positions, k_pages, v_pages,
+                      tables, q_start, n_valid):
+    h, k_pages, v_pages = attn.attn_apply_paged(
+        p["attn"], rmsnorm(p["ln1"], x), cfg, positions, k_pages, v_pages,
+        tables, q_start, n_valid)
+    x = x + h
+    y = rmsnorm(p["ln2"], x)
+    if cfg.is_moe():
+        f, _ = moe_mod.moe_apply(p["moe"], y, cfg, cfg.moe_capacity_factor)
+    else:
+        f = swiglu_apply(p["ffn"], y)
+    return x + f, k_pages, v_pages
+
+
+def forward_paged(params, cfg: ModelConfig, tokens, pages: dict, tables,
+                  q_start, n_valid, compute_dtype=jnp.bfloat16):
+    """One serving step over the paged pool: C new tokens per slot (C > 1 =
+    a prefill chunk, C == 1 = decode; both shapes share this one function,
+    so the scheduler keeps exactly two compiled graphs).
+
+    tokens (B, C) i32; tables (B, nP) i32; q_start (B,) tokens already
+    cached per slot; n_valid (B,) how many of the C are real (0 = inactive
+    slot — its row computes garbage on zeroed pages and writes nothing).
+    Returns (logits (B, V) of each slot's last valid token, new pages)."""
+    x = params["embed"].astype(compute_dtype)[tokens]
+    B, S = tokens.shape
+    positions = q_start[:, None] + jnp.arange(S)[None, :]
+
+    def body(h, inp):
+        lp, kp, vp = inp
+        h, kp, vp = layer_apply_paged(lp, h, cfg, positions, kp, vp,
+                                      tables, q_start, n_valid)
+        return h, (kp, vp)
+
+    x, (k_pages, v_pages) = jax.lax.scan(
+        body, x, (params["layers"], pages["k_pages"], pages["v_pages"]))
+    x = rmsnorm(params["ln_f"], x)
+    last = jnp.clip(n_valid - 1, 0, S - 1)                     # (B,)
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)    # (B, 1, D)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = (x @ head.astype(x.dtype))[:, 0]
+    return logits, {"k_pages": k_pages, "v_pages": v_pages}
+
+
 def prefill(params, cfg: ModelConfig, batch: dict, cache, compute_dtype=jnp.bfloat16):
     logits, cache, _ = forward(params, cfg, batch, cache,
                                compute_dtype=compute_dtype, logits_mode="last")

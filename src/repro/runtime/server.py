@@ -33,6 +33,8 @@ class Request:
     eos_id: Optional[int] = None
     generated: list = field(default_factory=list)
     done: bool = False
+    submit_step: int = 0   # scheduler clock at submission
+    finish_step: int = -1  # scheduler clock when the last token landed
 
 
 @dataclass
@@ -40,11 +42,28 @@ class ServerStats:
     waves: int = 0
     decode_steps: int = 0
     useful_tokens: int = 0
-    slot_tokens: int = 0  # decode_steps x wave_batch
+    slot_tokens: int = 0  # decode_steps x batch slots
+    # per-request latency in scheduler steps (finish - submit), appended at
+    # completion — the comparable tail metric across wave and continuous
+    latencies: list = field(default_factory=list)
 
     @property
     def utilization(self) -> float:
         return self.useful_tokens / max(self.slot_tokens, 1)
+
+    def _pct(self, q: float) -> float:
+        if not self.latencies:
+            return 0.0
+        xs = sorted(self.latencies)
+        return float(xs[min(len(xs) - 1, int(q * len(xs)))])
+
+    @property
+    def p50_latency_steps(self) -> float:
+        return self._pct(0.50)
+
+    @property
+    def p99_latency_steps(self) -> float:
+        return self._pct(0.99)
 
 
 class WaveServer:
@@ -65,6 +84,7 @@ class WaveServer:
     def submit(self, req: Request) -> None:
         if len(req.prompt) + req.max_new_tokens > self.max_len:
             raise ValueError(f"request {req.rid} exceeds max_len {self.max_len}")
+        req.submit_step = self.stats.decode_steps  # queueing counts as latency
         self.buckets[len(req.prompt)].append(req)
 
     def _next_wave(self) -> list[Request]:
@@ -90,6 +110,10 @@ class WaveServer:
 
         alive = np.ones(B, bool)
         for step in range(budget):
+            # tick the clock first so the step harvesting a request's last
+            # token is included in its latency
+            self.stats.decode_steps += 1
+            self.stats.slot_tokens += B
             toks = np.asarray(tok)
             for i, r in enumerate(wave):
                 if not alive[i]:
@@ -101,8 +125,9 @@ class WaveServer:
                         (r.eos_id is not None and t == r.eos_id):
                     r.done = True
                     alive[i] = False
-            self.stats.decode_steps += 1
-            self.stats.slot_tokens += B
+                    r.finish_step = self.stats.decode_steps
+                    self.stats.latencies.append(
+                        r.finish_step - r.submit_step)
             if not alive.any() or step == budget - 1:
                 break
             logits, cache = self._decode(self.params, {"tokens": tok}, cache)

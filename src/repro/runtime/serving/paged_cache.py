@@ -1,0 +1,78 @@
+"""Host-side page-pool bookkeeping for the continuous-batching scheduler.
+
+The device state is ONE shared pool per layer (``models.attention.
+init_paged_pool``); this class owns the free list, the per-slot block tables
+and lengths, and the admission-time zeroing. The leak-freedom contract lives
+at the ``alloc`` boundary: a slot's pages are zeroed *in-kernel*
+(``kernels/paged_attention`` ``paged_reset``) before the slot's table row is
+published, so no read path ever observes a previous tenant's K/V —
+recycling is safe by construction, not by cache-lifetime discipline (the
+serving analogue of the paper's R2 state isolation).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.paged_attention import ops as paged_ops
+
+
+class PagePool:
+    """Free-list allocator over a device page pool + per-slot block tables.
+
+    ``tables`` rows are padded with the slot's own first page (the reset is
+    idempotent over duplicates), so a short request never holds a reserved
+    sentinel page and the table array stays rectangular for the one compiled
+    graph."""
+
+    def __init__(self, model, *, n_slots: int, n_pages: int, page_size: int,
+                 pages_per_slot: int):
+        if model.init_paged_cache is None:
+            raise ValueError(
+                f"{model.cfg.name} ({model.cfg.family}) has no paged serving "
+                f"path; continuous batching needs a transformer-family model")
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.pages = model.init_paged_cache(n_pages, page_size)
+        self.free: list[int] = list(range(n_pages - 1, -1, -1))
+        self.tables = np.zeros((n_slots, pages_per_slot), np.int32)
+        self.lengths = np.zeros((n_slots,), np.int32)
+        self._owned: list[list[int]] = [[] for _ in range(n_slots)]
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    def alloc(self, slot: int, n: int) -> bool:
+        """Claim ``n`` pages for ``slot`` and zero them in-kernel. False when
+        the pool can't satisfy the claim (caller retries next step)."""
+        if n > len(self.free) or n > self.tables.shape[1]:
+            return False
+        assert not self._owned[slot], f"slot {slot} already holds pages"
+        pages = [self.free.pop() for _ in range(n)]
+        row = np.full((self.tables.shape[1],), pages[0], np.int32)
+        row[:n] = pages
+        # zero BEFORE publishing the table row: the pools are consumed and
+        # rebound (the Pallas path writes in place via donation). The full
+        # padded row keeps one compiled reset graph; re-zeroing the padding
+        # duplicates is idempotent.
+        self.pages = dict(zip(
+            ("k_pages", "v_pages"),
+            paged_ops.paged_reset(self.pages["k_pages"],
+                                  self.pages["v_pages"], row)))
+        self.tables[slot] = row
+        self.lengths[slot] = 0
+        self._owned[slot] = pages
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return the slot's pages to the free list. The page *contents* stay
+        on device until the next tenant's admission zeroes them — which is
+        exactly what the adversarial recycling test probes."""
+        self.free.extend(self._owned[slot])
+        self._owned[slot] = []
+        self.tables[slot] = 0
+        self.lengths[slot] = 0
+
+    def slot_pages(self, slot: int) -> list[int]:
+        """Physical page ids currently owned by ``slot`` (for tests/probes)."""
+        return list(self._owned[slot])

@@ -1,0 +1,206 @@
+"""Continuous-batching scheduler over the slot-recycled paged KV cache.
+
+Contrast with ``runtime.server.WaveServer`` (the measured baseline): instead
+of draining a whole same-length wave before touching the queue, the
+scheduler revisits admission at *every* step — a finished request's slot is
+released immediately, its pages go back to the free list, and the next
+queued request is admitted into the recycled slot with its pages zeroed
+in-kernel (``PagePool.alloc``). Prefill is chunked into the decode loop: an
+admitted request advances one ``prefill_chunk`` of its prompt per step while
+other slots keep decoding, so a long prompt never stalls the batch.
+
+Exactly two compiled graphs run everything, regardless of admission order:
+
+* the chunk graph  — ``paged_step`` at (n_slots, prefill_chunk); slots not
+  prefilling ride along with ``n_valid = 0``;
+* the decode graph — ``paged_step`` at (n_slots, 1) over every slot, active
+  or not (``n_valid`` masks the rest).
+
+Shapes never depend on which requests are in flight — per-request variation
+lives entirely in the block tables, lengths and validity masks, which are
+data. Page allocations are bucketed to powers of two so recycled claims fit
+each other's freed runs.
+
+Token-for-token equivalence with the wave baseline (greedy argmax over the
+same model) is a test invariant, not an aspiration: ``tests/test_serving.py``
+asserts it under randomized admission/finish orders.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.runtime.server import Request, ServerStats
+from repro.runtime.serving.paged_cache import PagePool
+
+
+@dataclass
+class _Slot:
+    req: Request
+    pos: int = 0                    # prompt tokens prefilled so far
+    pending: Optional[int] = None   # next decode input (set at prefill end)
+
+
+def _bucket_pages(tokens_needed: int, page_size: int, cap: int) -> int:
+    """Pages for ``tokens_needed``, rounded up to a power of two (so freed
+    allocations are exchangeable between differently-sized requests)."""
+    need = -(-tokens_needed // page_size)
+    b = 1
+    while b < need:
+        b *= 2
+    return min(b, cap)
+
+
+class ContinuousServer:
+    """Same submit/run surface as ``WaveServer``; continuous batching over
+    a paged, slot-recycled KV cache."""
+
+    def __init__(self, model, params, *, max_batch: int = 8,
+                 max_len: int = 512, page_size: int = 16,
+                 prefill_chunk: int = 16, n_pages: Optional[int] = None,
+                 trace_logits: bool = False):
+        self.model = model
+        self.params = params
+        self.n_slots = max_batch
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        per_slot = -(-max_len // page_size)
+        self.pool = PagePool(model, n_slots=max_batch,
+                             n_pages=n_pages or max_batch * per_slot,
+                             page_size=page_size, pages_per_slot=per_slot)
+        self.slots: list[Optional[_Slot]] = [None] * max_batch
+        self.queue: collections.deque[Request] = collections.deque()
+        self.stats = ServerStats()
+        self.clock = 0  # scheduler steps; the latency currency
+        # rid -> [logits row per generated token]; the leak-freedom probe
+        # asserts these are BIT-equal between a recycled-slot run and a
+        # fresh-cache run
+        self.trace_logits = trace_logits
+        self.logit_trace: dict[int, list[np.ndarray]] = {}
+        self._step_fn = jax.jit(model.paged_step, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------ queue
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.rid} exceeds max_len {self.max_len}")
+        req.submit_step = self.clock
+        self.queue.append(req)
+
+    # ------------------------------------------------------------- lifecycle
+    def _admit(self) -> None:
+        for i in range(self.n_slots):
+            if not self.queue:
+                return
+            if self.slots[i] is not None:
+                continue
+            req = self.queue[0]
+            need = _bucket_pages(len(req.prompt) + req.max_new_tokens,
+                                 self.pool.page_size, self.pool.tables.shape[1])
+            if not self.pool.alloc(i, need):
+                return  # pool pressure: retry next step, keep FIFO order
+            self.queue.popleft()
+            self.slots[i] = _Slot(req)
+
+    def _finish(self, i: int, req: Request) -> None:
+        req.done = True
+        req.finish_step = self.clock
+        self.stats.latencies.append(req.finish_step - req.submit_step)
+        self.pool.release(i)
+        self.slots[i] = None
+
+    def _append(self, i: int, tok: int) -> bool:
+        """Record a generated token; True when the request just finished."""
+        req = self.slots[i].req
+        req.generated.append(tok)
+        self.stats.useful_tokens += 1
+        if len(req.generated) >= req.max_new_tokens or \
+                (req.eos_id is not None and tok == req.eos_id):
+            self._finish(i, req)
+            return True
+        return False
+
+    # ------------------------------------------------------------------ step
+    def _run_prefill_chunks(self) -> None:
+        C = self.prefill_chunk
+        idx = [i for i, s in enumerate(self.slots)
+               if s is not None and s.pos < len(s.req.prompt)]
+        if not idx:
+            return
+        tokens = np.zeros((self.n_slots, C), np.int32)
+        n_valid = np.zeros((self.n_slots,), np.int32)
+        for i in idx:
+            s = self.slots[i]
+            chunk = s.req.prompt[s.pos:s.pos + C]
+            tokens[i, :len(chunk)] = chunk
+            n_valid[i] = len(chunk)
+        logits, self.pool.pages = self._step_fn(
+            self.params, tokens, self.pool.pages,
+            self.pool.tables, self.pool.lengths, n_valid)
+        logits = np.asarray(logits)
+        for i in idx:
+            s = self.slots[i]
+            s.pos += int(n_valid[i])
+            self.pool.lengths[i] += int(n_valid[i])
+            if s.pos == len(s.req.prompt):
+                # prefill done: the chunk's last-valid logits give the first
+                # generated token (same source as the wave's prefill logits)
+                if self.trace_logits:
+                    self.logit_trace.setdefault(s.req.rid, []).append(
+                        logits[i].copy())
+                tok = int(np.argmax(logits[i]))
+                if not self._append(i, tok):
+                    s.pending = tok
+
+    def _run_decode(self) -> None:
+        idx = [i for i, s in enumerate(self.slots)
+               if s is not None and s.pending is not None]
+        if not idx:
+            return
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        n_valid = np.zeros((self.n_slots,), np.int32)
+        for i in idx:
+            tokens[i, 0] = self.slots[i].pending
+            n_valid[i] = 1
+        logits, self.pool.pages = self._step_fn(
+            self.params, tokens, self.pool.pages,
+            self.pool.tables, self.pool.lengths, n_valid)
+        logits = np.asarray(logits)
+        for i in idx:
+            self.pool.lengths[i] += 1
+            if self.trace_logits:
+                self.logit_trace.setdefault(self.slots[i].req.rid, []).append(
+                    logits[i].copy())
+            tok = int(np.argmax(logits[i]))
+            if not self._append(i, tok):
+                self.slots[i].pending = tok
+
+    def step(self) -> None:
+        """One scheduler tick: admit into free slots, decode every ready
+        slot, advance every mid-prefill slot by one chunk. Decode runs
+        before the chunk pass so a slot completing prefill starts decoding
+        next tick — at most one token per slot per tick, which is the wave
+        loop's cadence and what makes the stats comparable.
+
+        Utilization accounting also mirrors the wave loop exactly: a tick
+        that HARVESTS tokens is charged a full batch of slots (idle and
+        mid-prefill slots are the measured tax); prefill compute itself is
+        free, like the wave's uncharged prefill call."""
+        self.clock += 1
+        before = self.stats.useful_tokens
+        self._admit()
+        self._run_decode()
+        self._run_prefill_chunks()
+        if self.stats.useful_tokens > before:
+            self.stats.decode_steps += 1
+            self.stats.slot_tokens += self.n_slots
+
+    def run_until_drained(self, max_steps: int = 100_000) -> ServerStats:
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and self.clock < max_steps:
+            self.step()
+        return self.stats

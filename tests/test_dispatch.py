@@ -138,6 +138,8 @@ EXPECTED_IMPLS = {
     "dp_noise_tree": {"packed", "perleaf", "pallas", "jnp"},
     "flash_attention": {"pallas", "blocked", "blocked_naive", "jnp"},
     "mamba2_ssd": {"pallas", "jnp", "sequential"},
+    "paged_attention": {"pallas", "gather", "jnp"},
+    "paged_reset": {"pallas", "jnp"},
     "rwkv6_wkv": {"pallas", "jnp", "masked", "sequential"},
     "zsmask": {"pallas", "jnp"},
     "zsmask_tree": {"packed", "perleaf", "pallas", "jnp"},

@@ -1,5 +1,11 @@
 """Serving correctness: prefill-then-decode equals full forward; elastic
-checkpoint restore with shardings."""
+checkpoint restore with shardings; continuous-batching leak-freedom — the
+adversarial slot-recycling probe (bit-equality with a fresh cache, pages
+read back zero) and a hypothesis property that continuous == wave
+token-for-token over random admission/finish orders."""
+import copy
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +14,8 @@ import pytest
 from repro.checkpoint import checkpointer as ck
 from repro.configs import get_smoke_config
 from repro.models.registry import build_model
+from repro.runtime.server import Request, WaveServer
+from repro.runtime.serving import ContinuousServer, PagePool, zipf_requests
 
 
 @pytest.mark.parametrize("arch", ["qwen2.5-3b", "qwen3-moe-235b-a22b"])
@@ -48,6 +56,265 @@ def test_elastic_restore_with_shardings(tmp_path):
     np.testing.assert_array_equal(np.asarray(restored["w"]),
                                   np.asarray(tree["w"]))
     assert restored["w"].sharding == sh["w"]
+
+
+# ---------------------------------------------------------------------------
+# paged-attention kernel parity (the dispatch contract behind the scheduler)
+
+
+def _paged_inputs(B, C, Hq, Hkv, D, N, P, nP, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, C, Hq, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (N, P, Hkv, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (N, P, Hkv, D), jnp.float32)
+    tables = jnp.asarray(np.stack(
+        [np.random.RandomState(b).permutation(N)[:nP] for b in range(B)]
+    ).astype(np.int32))
+    return q, kp, vp, tables
+
+
+@pytest.mark.parametrize("B,C,Hq,Hkv,D,N,P,nP,q_start", [
+    (3, 4, 4, 2, 16, 12, 8, 3, [5, 0, 17]),
+    (2, 1, 4, 4, 32, 8, 16, 2, [9, 30]),      # decode shape, MHA
+    (1, 8, 8, 2, 16, 6, 8, 4, [13]),          # chunk, GQA group 4
+    (3, 4, 4, 2, 16, 12, 8, 3, [-1, 3, 8]),   # row 0 fully masked (inactive)
+    (2, 4, 2, 1, 16, 5, 4, 4, [15, 15]),      # slot completely full
+])
+def test_paged_attention_pallas_bit_identical_to_oracle(B, C, Hq, Hkv, D, N,
+                                                        P, nP, q_start):
+    """Not allclose: BIT equality. The kernel body and the oracle share the
+    _page_step/_mask helpers and both run jitted, so any divergence means
+    the Pallas kernel stopped computing the documented recurrence."""
+    from repro.kernels.paged_attention import ref as pref
+    from repro.kernels.paged_attention.paged_attention import \
+        paged_attention_pallas
+    q, kp, vp, tables = _paged_inputs(B, C, Hq, Hkv, D, N, P, nP)
+    qs = jnp.asarray(q_start, jnp.int32)
+    o_pal = paged_attention_pallas(q, kp, vp, tables, qs, interpret=True)
+    o_ref = pref.paged_attention_oracle(q, kp, vp, tables, qs)
+    np.testing.assert_array_equal(np.asarray(o_pal), np.asarray(o_ref))
+
+
+def test_paged_attention_gather_matches_oracle():
+    from repro.kernels.paged_attention import ref as pref
+    q, kp, vp, tables = _paged_inputs(3, 4, 4, 2, 16, 12, 8, 3)
+    qs = jnp.asarray([5, 0, 17], jnp.int32)
+    o_g = pref.paged_attention_gather(q, kp, vp, tables, qs)
+    o_ref = pref.paged_attention_oracle(q, kp, vp, tables, qs)
+    np.testing.assert_allclose(np.asarray(o_g), np.asarray(o_ref), atol=2e-6)
+
+
+def test_paged_reset_parity_and_isolation():
+    """Pallas in-place zeroing == jnp scatter; pages OUTSIDE the row are
+    untouched (the reset can't reach another slot's K/V); duplicate page
+    ids in a row are idempotent."""
+    from repro.kernels.paged_attention import ref as pref
+    from repro.kernels.paged_attention.paged_attention import \
+        paged_reset_pallas
+    L, N, P, H, D = 2, 6, 4, 2, 8
+    base = jnp.arange(L * N * P * H * D,
+                      dtype=jnp.float32).reshape(L, N, P, H, D) + 1
+    row = jnp.array([3, 1, 3], jnp.int32)  # duplicate on purpose
+    kj, vj = pref.paged_reset_ref(base, base * 2, row)
+    # fresh arrays for the pallas call: its jit donates the inputs
+    kp, vp = paged_reset_pallas(base + 0, base * 2 + 0, row, interpret=True)
+    np.testing.assert_array_equal(np.asarray(kj), np.asarray(kp))
+    np.testing.assert_array_equal(np.asarray(vj), np.asarray(vp))
+    out = np.asarray(kp)
+    assert (out[:, [3, 1]] == 0).all()
+    keep = [i for i in range(N) if i not in (1, 3)]
+    np.testing.assert_array_equal(out[:, keep], np.asarray(base)[:, keep])
+
+
+def test_paged_attention_dispatch_registered():
+    """Both serving kernels resolve through the dispatch REGISTRY; on CPU
+    ``auto`` picks the gather/jnp variants (the Pallas variants gate on
+    TPU)."""
+    from repro.kernels import dispatch, paged_attention_ops  # noqa: F401
+    assert "paged_attention" in dispatch.REGISTRY.kernels()
+    assert "paged_reset" in dispatch.REGISTRY.kernels()
+    names = set(dispatch.available_impls("paged_attention"))
+    assert {"pallas", "gather", "jnp"} <= names
+    picked = dispatch.REGISTRY.resolve("paged_attention", "auto",
+                                       {"on_tpu": False})
+    assert picked.name == "gather"
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: leak-freedom and wave parity
+
+
+@functools.lru_cache(maxsize=1)
+def _serving_model():
+    cfg = get_smoke_config("qwen2.5-3b")
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_paged_step_matches_contiguous_forward():
+    """Anchor for the paged path: chunked prefill + paged decode over the
+    block-table cache reproduces the contiguous full forward."""
+    cfg, model, params = _serving_model()
+    T, Tpre, B, P = 12, 8, 2, 4
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, T), 0, cfg.vocab_size)
+
+    from repro.models import transformer
+    full, _, _ = transformer.forward(params, cfg, {"tokens": toks},
+                                     compute_dtype=jnp.float32)
+
+    pages = model.init_paged_cache(8, P)
+    tables = jnp.asarray([[0, 1, 2, 3], [4, 5, 6, 7]], jnp.int32)
+    qs = jnp.zeros((B,), jnp.int32)
+    nv = jnp.full((B,), Tpre, jnp.int32)
+    logits, pages = model.paged_step(params, toks[:, :Tpre], pages, tables,
+                                     qs, nv)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full[:, Tpre - 1]),
+                               atol=2e-3, rtol=2e-3)
+    for t in range(Tpre, T):
+        logits, pages = model.paged_step(
+            params, toks[:, t:t + 1], pages, tables,
+            jnp.full((B,), t, jnp.int32), jnp.ones((B,), jnp.int32))
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, t]),
+                                   atol=3e-3, rtol=3e-3)
+
+
+def test_recycled_slot_bit_equal_to_fresh_cache():
+    """The adversarial recycling probe: serve A to completion, admit B into
+    A's recycled slot, and require B's logits BIT-equal to a fresh-cache
+    run of B alone. Any residue of A's K/V reachable through B's block
+    table would perturb the softmax and break exact equality."""
+    cfg, model, params = _serving_model()
+    rng = np.random.RandomState(11)
+    mk_a = lambda: Request(rid=0, prompt=rng.randint(
+        0, cfg.vocab_size, 13).tolist(), max_new_tokens=6)
+    prompt_b = np.random.RandomState(12).randint(
+        0, cfg.vocab_size, 9).tolist()
+    mk_b = lambda: Request(rid=1, prompt=list(prompt_b), max_new_tokens=5)
+
+    srv = ContinuousServer(model, params, max_batch=1, max_len=32,
+                           page_size=4, prefill_chunk=8, trace_logits=True)
+    srv.submit(mk_a())
+    srv.step()
+    pages_a = srv.pool.slot_pages(0)
+    assert pages_a, "A was not admitted"
+    srv.run_until_drained()
+    # A released its pages; B must land on (some of) the SAME physical pages
+    srv.submit(mk_b())
+    srv.step()
+    pages_b = srv.pool.slot_pages(0)
+    assert set(pages_b) & set(pages_a), "B did not recycle A's pages"
+    srv.run_until_drained()
+    recycled_trace = srv.logit_trace[1]
+
+    fresh = ContinuousServer(model, params, max_batch=1, max_len=32,
+                             page_size=4, prefill_chunk=8, trace_logits=True)
+    fresh.submit(mk_b())
+    fresh.run_until_drained()
+    fresh_trace = fresh.logit_trace[1]
+
+    assert len(recycled_trace) == len(fresh_trace) == 5
+    for got, want in zip(recycled_trace, fresh_trace):
+        np.testing.assert_array_equal(got, want)  # BIT equality, not allclose
+
+
+def test_recycling_zeroes_pages_in_kernel():
+    """Pool-level half of the probe: page *contents* survive release (the
+    would-be leak) and are zeroed in-kernel at the next admission, before
+    the table row is published."""
+    cfg, model, params = _serving_model()
+    pool = PagePool(model, n_slots=1, n_pages=4, page_size=4,
+                    pages_per_slot=4)
+    assert pool.alloc(0, 4)
+    owned = pool.slot_pages(0)
+    toks = jnp.asarray(np.random.RandomState(0).randint(
+        0, cfg.vocab_size, (1, 8)), jnp.int32)
+    _, pool.pages = model.paged_step(
+        params, toks, pool.pages, jnp.asarray(pool.tables),
+        jnp.asarray(pool.lengths), jnp.full((1,), 8, jnp.int32))
+    kp = np.asarray(pool.pages["k_pages"])
+    assert np.abs(kp[:, owned]).sum() > 0  # K/V actually written
+    pool.release(0)
+    kp = np.asarray(pool.pages["k_pages"])
+    assert np.abs(kp[:, owned]).sum() > 0  # residue persists after release
+    assert pool.alloc(0, 4)
+    assert set(pool.slot_pages(0)) == set(owned)  # recycled the same pages
+    kp = np.asarray(pool.pages["k_pages"])
+    vp = np.asarray(pool.pages["v_pages"])
+    assert (kp[:, owned] == 0).all() and (vp[:, owned] == 0).all()
+
+
+def _assert_token_parity(seed, max_batch, chunk, eos_id):
+    """Both schedulers serve byte-identical request lists with the same
+    weights and greedy argmax, so they must emit the SAME tokens per
+    request — scheduling may only change latency, never content."""
+    cfg, model, params = _serving_model()
+    reqs = zipf_requests(7, cfg.vocab_size, min_len=3, max_len=20,
+                         max_new_low=2, max_new_high=8,
+                         eos_id=eos_id, seed=seed)
+    wave = WaveServer(model, params, max_batch=max_batch, max_len=32)
+    cont = ContinuousServer(model, params, max_batch=max_batch, max_len=32,
+                            page_size=4, prefill_chunk=chunk)
+    w_reqs, c_reqs = copy.deepcopy(reqs), copy.deepcopy(reqs)
+    for r in w_reqs:
+        wave.submit(r)
+    for r in c_reqs:
+        cont.submit(r)
+    wave.run_until_drained()
+    cont.run_until_drained()
+    for rw, rc in zip(w_reqs, c_reqs):
+        assert rw.generated == rc.generated, f"rid {rw.rid} diverged"
+    assert wave.stats.useful_tokens == cont.stats.useful_tokens
+
+
+@pytest.mark.parametrize("seed,max_batch,chunk,eos_id", [
+    (0, 2, 4, None),
+    (1, 3, 8, 7),    # eos cuts budgets → ragged finish order
+    (2, 2, 7, None),  # chunk not a divisor of page size
+])
+def test_continuous_matches_wave_token_for_token(seed, max_batch, chunk,
+                                                 eos_id):
+    _assert_token_parity(seed, max_batch, chunk, eos_id)
+
+
+def test_continuous_matches_wave_property():
+    """Hypothesis sweep over random admission/finish orders (randomized
+    extension of the deterministic cases above)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=6, derandomize=True)
+    @given(seed=st.integers(0, 10_000), max_batch=st.sampled_from([2, 3]),
+           chunk=st.sampled_from([4, 8]), use_eos=st.booleans())
+    def prop(seed, max_batch, chunk, use_eos):
+        _assert_token_parity(seed, max_batch, chunk,
+                             7 if use_eos else None)
+
+    prop()
+
+
+def test_session_serve_scheduler_stats():
+    """``Session.serve(scheduler=...)`` runs both schedulers and surfaces
+    latency percentiles; tokens agree across schedulers."""
+    from repro.api import Session
+    sess = Session.from_config("qwen2.5-3b")
+    _, model, params = _serving_model()
+    reqs = zipf_requests(6, sess.cfg.vocab_size, min_len=3, max_len=16,
+                         max_new_low=2, max_new_high=6, seed=4)
+    out = {}
+    for kind in ("wave", "continuous"):
+        res = sess.serve(scheduler=kind, requests=copy.deepcopy(reqs),
+                         params=params, max_batch=2, max_len=32,
+                         page_size=4, prefill_chunk=4)
+        s = res.stats
+        assert len(s.latencies) == len(reqs)
+        assert s.p50_latency_steps <= s.p99_latency_steps
+        assert 0.0 < s.utilization <= 1.0
+        assert res.tokens.shape[0] == len(reqs)
+        out[kind] = res
+    np.testing.assert_array_equal(out["wave"].tokens,
+                                  out["continuous"].tokens)
 
 
 def test_encoder_rejects_decode():

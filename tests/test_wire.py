@@ -224,6 +224,49 @@ def test_dropped_handler_resyncs_via_full_blob():
     assert sess.accountant.contributions == [4, 3, 3, 4]
 
 
+def test_async_rejoin_resyncs_warm_off_the_round_path():
+    """``rejoin_silo_async`` does attestation, key re-release and the full
+    warm resync at CALL time — the next round then runs without any
+    in-round ``StaleParamsError`` resync (the blocking path the sync
+    ``rejoin_silo`` pays)."""
+    sess, params, grad_fn, update_fn = _session_fixture()
+    params, _ = sess.step(0, params, grad_fn, update_fn, lr=0.5)
+    assert sess.drop_silo(1, step=1)
+    old_chan = sess.handlers[1].channel
+    params, _ = sess.step(1, params, grad_fn, update_fn, lr=0.5)
+    params, _ = sess.step(2, params, grad_fn, update_fn, lr=0.5)
+
+    assert sess.rejoin_silo_async(1)
+    warm_bytes = sess.wire_stats["resync_bytes"]
+    assert warm_bytes > 0                       # resync happened NOW
+    assert sess.handlers[1]._params_epoch == 3  # warm at the current epoch
+    # both channel ends rebuilt: replay counters restart in sync
+    assert sess.handlers[1].channel is not old_chan
+    assert sess.updater.channels[sess.handlers[1].name] is not old_chan
+
+    params, _ = sess.step(3, params, grad_fn, update_fn, lr=0.5)
+    # the round itself paid NO resync: the delta broadcast chained cleanly
+    assert sess.wire_stats["resync_bytes"] == warm_bytes
+    assert sess.handlers[1]._params_epoch == 4
+    assert sess.accountant.contributions == [4, 3, 3, 4]
+
+
+def test_async_rejoin_respects_budget_exhaustion():
+    """A silo barred by membership policy stays out: the async path refuses
+    before touching attestation or keys (fail closed)."""
+    sess, params, grad_fn, update_fn = _session_fixture(
+        budgets={1: 0.001})  # tiny budget: exhausted by round 0's recording
+    params, _ = sess.step(0, params, grad_fn, update_fn, lr=0.5)
+    params, _ = sess.step(1, params, grad_fn, update_fn, lr=0.5)
+    assert 1 in sess.membership.excluded
+    bytes_before = sess.wire_stats["resync_bytes"]
+    assert not sess.rejoin_silo_async(1)
+    assert sess.wire_stats["resync_bytes"] == bytes_before
+    # the operator override path still works — and resyncs warm
+    assert sess.rejoin_silo_async(1, override=True)
+    assert sess.wire_stats["resync_bytes"] > bytes_before
+
+
 def test_pipelined_run_matches_serial_bit_exact():
     sess_a, params, grad_fn, update_fn = _session_fixture()
     pa = params
