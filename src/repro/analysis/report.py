@@ -64,23 +64,34 @@ def privacy_spend_table(report: dict, attestation=None) -> str:
     With ``attestation`` (the session's attestation service), a ledger
     signature is verified and its status rendered; without it the signature
     is only surfaced (verification needs the root of trust)."""
+    # round-trip telemetry rides in the signed body only when the trainer
+    # observed it (SiloTelemetry) — the column appears iff any silo has it
+    with_rt = any(s.get("avg_round_trip_ms") is not None
+                  for s in report["silos"])
+    rt_head = " rt (ms) |" if with_rt else ""
+    rt_rule = "---|" if with_rt else ""
     lines = [
         f"mode={report['mode']} sigma={report['sigma']:.4g} "
         f"delta={report['delta']:.1e} lam={report['lam']:.2f} "
         f"steps={report['steps']} "
         f"global eps={_eps(report['epsilon_global'])}",
         "",
-        "| silo | steps in | steps out | epsilon | budget | remaining | status |",
-        "|---|---|---|---|---|---|---|",
+        "| silo | steps in | steps out | epsilon | budget | remaining "
+        f"| status |{rt_head}",
+        f"|---|---|---|---|---|---|---|{rt_rule}",
     ]
     for s in report["silos"]:
         budget = "—" if s["budget"] is None else f"{s['budget']:.4f}"
         remaining = "—" if s["remaining"] is None else f"{s['remaining']:.4f}"
         status = "EXHAUSTED" if s["exhausted"] else "ok"
+        rt = ""
+        if with_rt:
+            ms = s.get("avg_round_trip_ms")
+            rt = " — |" if ms is None else f" {ms:.3f} |"
         lines.append(
             f"| {s['silo']} | {s['steps_participated']} "
             f"| {s['steps_sat_out']} | {_eps(s['epsilon'])} "
-            f"| {budget} | {remaining} | {status} |")
+            f"| {budget} | {remaining} | {status} |{rt}")
     for e in report.get("exclusions", []):
         lines.append(f"silo {e['silo']} excluded at step {e['step']} "
                      f"(eps {_eps(e['epsilon'])} >= budget "

@@ -21,6 +21,7 @@ kernel selection inside a session is still governed by
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, replace
 from typing import Any, Callable, Optional, Union
@@ -354,6 +355,9 @@ class CollaborativeSession:
     membership: Any = None
     telemetry: Any = None  # per-party step-time attribution
     codec: str = "packed"  # wire codec: packed flat buffers | legacy pickle
+    # Merkle batch-MAC per round (one keyed HMAC + O(log n) path per message
+    # on the updater instead of n full HMAC passes; see core/tee/merkle.py)
+    batch_mac: bool = False
     # delta-broadcast state: the packed buffer of the last broadcast params
     # and the broadcast epoch (handlers resync on epoch gaps)
     _bcast_buf: Any = None
@@ -372,7 +376,9 @@ class CollaborativeSession:
                    silo_epsilon_budget: Optional[float] = None,
                    silo_budgets: Optional[dict] = None,
                    codec: str = "packed",
-                   params_template=None) -> "CollaborativeSession":
+                   params_template=None,
+                   batch_mac: Optional[bool] = None,
+                   shard_workers: Optional[int] = None) -> "CollaborativeSession":
         """``silo_data``: one batch dict per dataset owner (stays silo-local).
         ``silo_epsilon_budget``/``silo_budgets`` arm per-owner budget
         enforcement; the ledger config joins the attestation measurement, so
@@ -385,7 +391,16 @@ class CollaborativeSession:
         crypto — the benchmark baseline. ``params_template`` (a params
         pytree) pins the session's packed-layout fingerprint into the wire
         config, and therefore into every component's attestation
-        measurement: a component speaking a different layout gets no keys."""
+        measurement: a component speaking a different layout gets no keys.
+
+        ``batch_mac`` (default: on for the packed codec) authenticates each
+        round's sealed updates through the admin's Merkle batch tag — one
+        keyed HMAC per round plus an O(log n) path check per message on the
+        updater, with tamper of any single update still detected and
+        attributed (core/tee/merkle.py). ``shard_workers`` threads the
+        updater's accumulation over parameter-axis shards (bit-identical to
+        the serial fold); default: 4 workers from 32 silos up, serial
+        below."""
         from repro.core import flatbuf
         from repro.core.privacy import PrivacyLedger
         from repro.core.tee import wire
@@ -422,6 +437,9 @@ class CollaborativeSession:
             h.channel = SecureChannel(key, h.name, version=chan_ver)
             handlers.append(h)
         updater = ModelUpdater("updater", svc)
+        updater.attest(svc.policy)
+        updater.shard_workers = shard_workers if shard_workers is not None \
+            else (4 if n >= 32 else 0)
         for h in handlers:
             updater.channels[h.name] = SecureChannel(
                 svc.kds._records[f"dk-{h.silo_idx}"].key, h.name,
@@ -430,6 +448,15 @@ class CollaborativeSession:
         admin = Admin("admin", svc, root_key=jax.random.PRNGKey(root_seed),
                       n_silos=n, ledger=ledger)
         admin.attest(svc.policy)  # signs spend reports with this identity
+        # admin<->updater aggregation key for the Merkle batch tags: the
+        # model owner uploads it, the KDS releases it only against BOTH
+        # components' verified measurements — a driver between them cannot
+        # mint tags
+        svc.kds.upload_key("dk-agg", derive_key(b"session-root", "dk-agg"),
+                           "model-owner", svc.expected_measurement(),
+                           svc.policy.hash())
+        admin.agg_key = svc.kds.request_key("dk-agg", admin.report)
+        updater.agg_key = svc.kds.request_key("dk-agg", updater.report)
         for h in handlers:
             # handlers trust the attested admin for budget verdicts — the
             # training driver can't fabricate an all-allowed vector
@@ -438,7 +465,9 @@ class CollaborativeSession:
                    updater=updater, admin=admin, accountant=ledger,
                    n_silos=n, clip_bound=privacy.clip_bound,
                    membership=SiloMembership(n),
-                   telemetry=SiloTelemetry(n), codec=codec)
+                   telemetry=SiloTelemetry(n), codec=codec,
+                   batch_mac=batch_mac if batch_mac is not None
+                   else codec == "packed")
 
     def drop_silo(self, silo: int, step: Optional[int] = None,
                   cooldown: Optional[int] = None) -> bool:
@@ -570,10 +599,20 @@ class CollaborativeSession:
         else:
             self.wire_stats["broadcast_bytes"] += \
                 len(blob) * int(np.sum(active))
-        updates = {}
-        for h in self.handlers:
-            if not active[h.silo_idx]:
-                continue
+        # admin-mode masking: the closing row is computed ONCE on the admin
+        # and handed to the one closing handler — O(P) fan-out per round at
+        # any n, instead of that handler regenerating all n rows (an (n, P)
+        # stack) to reconstruct the zero-sum closer
+        admin_row = None
+        if self.privacy.enabled and self.privacy.mask_mode == "admin" \
+                and bool(np.any(active)):
+            admin_row = self.admin.closing_mask_row(
+                self.privacy, params, plan["keys"], active,
+                plan["noise_state"], self.clip_bound)
+        handlers = [h for h in self.handlers if active[h.silo_idx]]
+        lock = threading.Lock()
+
+        def one(h):
             t0 = time.perf_counter()
             try:
                 u = h.compute_update(blob, grad_fn, self.privacy,
@@ -581,27 +620,50 @@ class CollaborativeSession:
                                      clip_bound=self.clip_bound,
                                      active=active,
                                      noise_state=plan["noise_state"],
-                                     verdicts=plan["verdicts"])
+                                     verdicts=plan["verdicts"],
+                                     admin_row=admin_row)
             except wire.StaleParamsError:
-                full = self._resync_blob()
-                self.wire_stats["resync_bytes"] += len(full)
+                with lock:
+                    full = self._resync_blob()
+                    self.wire_stats["resync_bytes"] += len(full)
                 u = h.compute_update(full, grad_fn, self.privacy,
                                      plan["keys"], self.n_silos,
                                      clip_bound=self.clip_bound,
                                      active=active,
                                      noise_state=plan["noise_state"],
-                                     verdicts=plan["verdicts"])
-            # real per-party timing feeds straggler attribution
-            self.telemetry.observe(h.silo_idx, time.perf_counter() - t0)
-            self.wire_stats["update_bytes"] += len(u)
-            updates[h.name] = u
+                                     verdicts=plan["verdicts"],
+                                     admin_row=admin_row)
+            with lock:
+                # real per-party timing feeds straggler attribution
+                self.telemetry.observe(h.silo_idx, time.perf_counter() - t0)
+                self.wire_stats["update_bytes"] += len(u)
             if sink is not None:
                 sink(h.name, u)
+            return u
+
+        # each handler's numerics are keyed by its silo index, so execution
+        # order cannot change any value; results are assembled in silo
+        # order regardless of how a driver schedules the parties (the
+        # updater's expected-order staging covers out-of-order delivery)
+        results = [one(h) for h in handlers]
+        updates = {h.name: u for h, u in zip(handlers, results)}
         if not updates:
             raise RuntimeError(
                 "no silo may contribute this round (budgets exhausted or "
                 "membership empty); DP forbids further training")
         return updates
+
+    def _batch_tag(self, round_id: int, updates: dict) -> Optional[dict]:
+        """The round's Merkle batch tag over the sealed updates, in the
+        order they were produced (each handler reported its leaf — the
+        digest of its whole channel blob — when it sealed; see
+        ``DataHandler.compute_update``). None when batch-MAC is off: the
+        updater then runs per-message HMAC as before."""
+        if not self.batch_mac:
+            return None
+        by_name = {h.name: h for h in self.handlers}
+        return self.admin.batch_tag(
+            [(name, by_name[name].last_leaf) for name in updates], round_id)
 
     def step(self, step_idx: int, params, grad_fn: Callable,
              update_fn: Callable, lr: float):
@@ -614,8 +676,9 @@ class CollaborativeSession:
         (new_params, mean_loss)."""
         plan = self._admin_plane(step_idx)
         updates = self._collect_updates(params, plan, grad_fn)
-        params, loss = self.updater.aggregate(updates, params, update_fn,
-                                              lr=lr)
+        params, loss = self.updater.aggregate(
+            updates, params, update_fn, lr=lr,
+            batch=self._batch_tag(step_idx, updates))
         self.admin.advance(plan["keys"], plan["active"])  # ledger bitmask
         self.wire_stats["rounds"] += 1
         return params, loss
@@ -648,9 +711,19 @@ class CollaborativeSession:
                                 thread_name_prefix="updater") as ex:
             plan = self._admin_plane(start)
             for t in range(start, start + n_rounds):
-                rs = self.updater.begin_round(params)
+                # batch-MAC mode: updates stream into the updater BEFORE the
+                # admin has seen every leaf, so the tag is issued after the
+                # last ingest and verified in finish_round — nothing commits
+                # until every leaf sits under the MACed root. The expected
+                # order makes the updater stage out-of-order arrivals (the
+                # party pool completes in any order) and flush in silo
+                # order: the sum's fp association stays bit-identical
+                expected = [h.name for h in self.handlers
+                            if plan["active"][h.silo_idx]]
+                rs = self.updater.begin_round(params, expected=expected,
+                                              batch_mode=self.batch_mac)
                 ingests = []
-                self._collect_updates(
+                updates = self._collect_updates(
                     params, plan, grad_fn,
                     sink=lambda name, blob: ingests.append(
                         ex.submit(self.updater.ingest, rs, name, blob)))
@@ -658,7 +731,8 @@ class CollaborativeSession:
                     # decode/auth errors surface BEFORE the admin plane
                     # advances — same failure behaviour as the serial loop
                     ing.result()
-                fut = ex.submit(self.updater.finish_round, rs, update_fn, lr)
+                fut = ex.submit(self.updater.finish_round, rs, update_fn,
+                                lr, self._batch_tag(t, updates))
                 # overlapped with the aggregation tail running above. If the
                 # model owner's update_fn itself fails, this round is already
                 # recorded — conservative: the handlers' masked updates left
@@ -678,12 +752,14 @@ class CollaborativeSession:
         return self.accountant.epsilon(silo)
 
     def privacy_report(self) -> dict:
-        """The admin-plane spend report (per-silo epsilon/budgets/verdicts),
-        HMAC-signed with a key derived from the admin's attestation identity
-        (verify with ``repro.analysis.report.verify_spend_report``)."""
+        """The admin-plane spend report (per-silo epsilon/budgets/verdicts,
+        plus each silo's observed round-trip EMA), HMAC-signed with a key
+        derived from the admin's attestation identity (verify with
+        ``repro.analysis.report.verify_spend_report``)."""
+        rt = self.telemetry.snapshot()
         if getattr(self.admin, "ledger", None) is not None:
-            return self.admin.sign_spend_report()
-        return self.accountant.spend_report()
+            return self.admin.sign_spend_report(round_trip_s=rt)
+        return self.accountant.spend_report(round_trip_s=rt)
 
     @property
     def expected_measurement(self) -> str:

@@ -261,13 +261,39 @@ class DPPipeline:
         impl = self.policy.inner if self.policy.mode == "packed" else "auto"
         return clip_ops.clipped_sum(stacked, scales, impl=impl)
 
-    def silo_contribution(self, g_tree, silo, scale, active, keys: BarrierKeys,
+    def admin_closing_row(self, template, active, keys: BarrierKeys,
                           state: NoiseState, bound):
+        """Admin-side construction of the closing silo's mask row — the one
+        O(k*P) row in the admin mask set. Returns ``(closing, row)``.
+
+        At n silos, letting every handler rebuild its own row keeps n-1 of
+        them at O(P) but the *closing* handler at O(k*P); the admin (who owns
+        every stream anyway) computes that row once per round and ships it
+        with the step keys, so per-handler work is O(P) at any n. The row is
+        produced by the IDENTICAL ``masking.admin_mask_row`` call (same
+        streams, same sequential-subtraction fp association), so a handler
+        using the distributed row is bit-identical to one rebuilding it."""
+        act = np.asarray(active).astype(bool)
+        closing = int(self.n_silos - 1 - np.argmax(act[::-1]))
+        sigma_c = self.priv.sigma * jnp.asarray(bound, jnp.float32)
+        row = masking.admin_mask_row(
+            jax.random.wrap_key_data(masking._raw(keys.key_xi)), template,
+            self.n_silos, closing, sigma_c, self.priv.mask_scale * sigma_c,
+            active=act,
+            correction=self._admin_correction(template, state, bound))
+        return closing, row
+
+    def silo_contribution(self, g_tree, silo, scale, active, keys: BarrierKeys,
+                          state: NoiseState, bound, admin_row=None):
         """One silo's wire contribution: clip + zero-sum mask over the active
         ring + its sigma_c/sqrt(k) noise share + its lambda-correction share,
         in one fused dispatch. Summing the active silos' outputs (psum on the
         barrier tier, updater-side reduce on the wire tier) yields exactly
         ``sum_i clip(g_i) + sigma*C*(xi_t - lam*xi_{t-1})``.
+
+        ``admin_row``: admin-distributed mask row for THIS silo (admin mode
+        only; see :meth:`admin_closing_row`) — used instead of regenerating
+        the row locally.
 
         Returns a packed (P,) buffer under the packed policy (psum it, then
         :meth:`finalize`), a pytree under perleaf (which supports the full
@@ -300,15 +326,19 @@ class DPPipeline:
                 sigma_c_a = priv.sigma * jnp.asarray(bound, jnp.float32)
                 act_np = np.asarray(active).astype(bool)
                 closing = int(self.n_silos - 1 - np.argmax(act_np[::-1]))
-                # only the closing row carries the correction; skip the
-                # O(P) xi_{t-1} regeneration for every other handler
-                corr = self._admin_correction(g_tree, state, bound) \
-                    if int(silo) == closing else None
-                row = masking.admin_mask_row(
-                    jax.random.wrap_key_data(masking._raw(keys.key_xi)),
-                    g_tree, self.n_silos, int(silo), sigma_c_a,
-                    priv.mask_scale * sigma_c_a, active=active,
-                    correction=corr)
+                if admin_row is not None and int(silo) == closing:
+                    # admin-distributed closing row (O(P) fan-out at any n)
+                    row = admin_row
+                else:
+                    # only the closing row carries the correction; skip the
+                    # O(P) xi_{t-1} regeneration for every other handler
+                    corr = self._admin_correction(g_tree, state, bound) \
+                        if int(silo) == closing else None
+                    row = masking.admin_mask_row(
+                        jax.random.wrap_key_data(masking._raw(keys.key_xi)),
+                        g_tree, self.n_silos, int(silo), sigma_c_a,
+                        priv.mask_scale * sigma_c_a, active=active,
+                        correction=corr)
                 return jax.tree.map(
                     lambda x, m: x.astype(jnp.float32) * scaled + m * gate,
                     g_tree, row)

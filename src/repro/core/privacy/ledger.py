@@ -271,16 +271,20 @@ class PrivacyLedger:
                 "epsilon_budget": self.epsilon_budget,
                 "budgets": {str(k): v for k, v in sorted(self.budgets.items())}}
 
-    def spend_report(self) -> dict:
+    def spend_report(self, round_trip_s: Optional[dict] = None) -> dict:
         """Admin-plane spend report (JSON-serializable): global epsilon plus
-        one row per silo with its own history, spend, budget and verdict."""
+        one row per silo with its own history, spend, budget and verdict.
+        ``round_trip_s`` (silo -> EMA seconds, from SiloTelemetry.snapshot)
+        adds an ``avg_round_trip_ms`` column to each silo's row — the
+        latency view rides inside the signed body."""
         def _f(x):
             return None if x is None or math.isinf(x) else float(x)
+        rt = round_trip_s or {}
         silos = []
         for i in range(self.n_silos):
             eps = self.epsilon(i)
             b = self.budget_for(i)
-            silos.append({
+            row = {
                 "silo": i,
                 "steps_participated": self._silo_steps[i],
                 "steps_sat_out": self.steps - self._silo_steps[i],
@@ -288,7 +292,12 @@ class PrivacyLedger:
                 "budget": _f(b),
                 "remaining": _f(max(b - eps, 0.0)) if b is not None else None,
                 "exhausted": self.silo_exhausted(i),
-            })
+            }
+            if rt:
+                row["avg_round_trip_ms"] = (
+                    None if rt.get(i) is None
+                    else round(float(rt[i]) * 1e3, 3))
+            silos.append(row)
         # events carry raw floats (math.inf is fine in Python); the report
         # must be strict-JSON, so inf maps to null here too
         exclusions = [{**e, "epsilon": _f(e.get("epsilon")),

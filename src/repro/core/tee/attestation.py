@@ -14,6 +14,7 @@ policy hash.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import hmac
 import inspect
@@ -26,7 +27,14 @@ SIMULATION_NOTICE = "SIMULATED-TEE (software root of trust; protocol-faithful)"
 
 def measure_modules(modules) -> str:
     """Cryptographic measurement of the service code (open-sourced in the
-    paper so all actors can reproduce the expected value)."""
+    paper so all actors can reproduce the expected value). Memoized per
+    module set: sources cannot change inside one process, and at hundreds of
+    components per session the repeated source hashing dominated setup."""
+    return _measure_modules_cached(tuple(modules))
+
+
+@functools.lru_cache(maxsize=64)
+def _measure_modules_cached(modules: tuple) -> str:
     h = hashlib.sha256()
     for mod in modules:
         try:

@@ -19,6 +19,10 @@ Workflow (paper Fig. 1):
 from __future__ import annotations
 
 import hashlib
+import hmac
+import queue
+import struct
+import threading
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -32,7 +36,7 @@ from repro.core.privacy import PrivacyLedger
 from repro.core.barrier import BarrierKeys, step_keys
 from repro.core.dp_pipeline import DPPipeline
 from repro.core.noise_correction import NoiseState, init_state
-from repro.core.tee import wire
+from repro.core.tee import merkle, wire
 from repro.core.tee.attestation import (AttestationService, LaunchPolicy,
                                         measure_config, measure_modules)
 from repro.core.tee.channels import (SecureChannel, derive_key, open_sealed,
@@ -65,8 +69,9 @@ def _guarded_modules():
     import repro.core.masking as _m
     import repro.core.privacy.bounds as _pb
     import repro.core.privacy.ledger as _pl
+    import repro.core.tee.merkle as _mk
     import repro.core.tee.wire as _w
-    return [_p, _pl, _pb, _b, _c, _m, _f, _w]
+    return [_p, _pl, _pb, _b, _c, _m, _f, _w, _mk]
 
 
 def _bind_configs(code: str, ledger_config: dict, wire_config: dict) -> str:
@@ -79,6 +84,102 @@ def _bind_configs(code: str, ledger_config: dict, wire_config: dict) -> str:
         return code
     cfg = {"ledger": ledger_config, "wire": wire_config}
     return hashlib.sha256((code + measure_config(cfg)).encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Shared jitted handler pipeline (many-silo scale-out)
+#
+# Handlers used to jit their norm->clip->mask pipeline with their silo index
+# baked in as a closure constant — n separate XLA compiles per session, which
+# at n=400 dominates setup and bloats the jit cache. The packed engine
+# already supports a *traced* silo index (the barrier tier passes
+# lax.axis_index), so one compile keyed on the engine configuration serves
+# every handler, with silo as a runtime argument. PrivacyConfig is a plain
+# (unhashable) dataclass, so the cache is a small equality-scan list rather
+# than a dict.
+
+_PIPE_CACHE: list = []  # [(key, jitted_fn)]
+_PIPE_CACHE_MAX = 32
+_PIPE_CACHE_LOCK = threading.Lock()
+
+
+def _shared_pipe_fn(pipe: DPPipeline, has_prev_active: bool):
+    key = (pipe.priv, pipe.layout, pipe.n_silos, pipe.policy,
+           has_prev_active)
+    with _PIPE_CACHE_LOCK:
+        for k, fn in _PIPE_CACHE:
+            if k == key:
+                return fn
+
+    def fn(g, silo, active, keys, state, bound):
+        norm = pipe.norm_tree(g)
+        scale = pipe.clip_scale(norm, bound)
+        return pipe.silo_contribution(g, silo, scale, active, keys,
+                                      state, bound), norm
+
+    fn = jax.jit(fn)
+    with _PIPE_CACHE_LOCK:
+        _PIPE_CACHE.append((key, fn))
+        if len(_PIPE_CACHE) > _PIPE_CACHE_MAX:
+            del _PIPE_CACHE[0]
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Sharded round accumulation (many-silo scale-out)
+
+
+class _ShardedAccumulator:
+    """Accumulate per-silo ``(P,)`` fp32 buffers across worker threads while
+    staying BIT-IDENTICAL to the serial left fold.
+
+    The parameter axis is split into ``workers`` contiguous shards; each
+    worker owns ``acc[lo:hi]`` and folds the incoming buffers' matching
+    slices strictly in arrival (= silo) order off its own FIFO queue. Per
+    element the additions happen in exactly the serial order — slicing
+    commutes with an elementwise sum — so the sharded total equals the
+    serial ``((b0 + b1) + b2) + ...`` bitwise, while the fold itself runs
+    ``workers``-wide (numpy's buffer add releases the GIL)."""
+
+    def __init__(self, first: np.ndarray, workers: int):
+        self._acc = np.array(first, np.float32, copy=True)
+        n = self._acc.shape[0]
+        workers = max(1, min(int(workers), n))
+        bounds = np.linspace(0, n, workers + 1).astype(int)
+        self._spans = [(int(lo), int(hi)) for lo, hi in
+                       zip(bounds[:-1], bounds[1:]) if hi > lo]
+        self._queues = [queue.Queue() for _ in self._spans]
+        self._errors: list = []
+        self._threads = []
+        for (lo, hi), q in zip(self._spans, self._queues):
+            t = threading.Thread(target=self._worker, args=(lo, hi, q),
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _worker(self, lo: int, hi: int, q: queue.Queue):
+        acc = self._acc[lo:hi]
+        while True:
+            buf = q.get()
+            if buf is None:
+                return
+            try:
+                acc += buf[lo:hi]
+            except Exception as e:  # surfaced by result()
+                self._errors.append(e)
+
+    def add(self, buf: np.ndarray) -> None:
+        for q in self._queues:
+            q.put(buf)
+
+    def result(self) -> np.ndarray:
+        for q in self._queues:
+            q.put(None)
+        for t in self._threads:
+            t.join()
+        if self._errors:
+            raise self._errors[0]
+        return self._acc
 
 
 # ---------------------------------------------------------------------------
@@ -166,9 +267,9 @@ class DataHandler(Component):
         pinned = self.launch_wire_config.get("layout")
         self._pinned_fp: Optional[bytes] = bytes.fromhex(pinned) \
             if pinned else None
-        # jitted norm->clip->mask pipeline, cached per (priv, layout, n)
-        self._pipe_key = None
-        self._pipe_fn = None
+        # digest of the last sealed update this handler emitted — the leaf
+        # it reports to the admin for the round's Merkle batch tag
+        self.last_leaf: Optional[bytes] = None
 
     def _check_pin(self, fp: bytes) -> None:
         if self._pinned_fp is not None and fp != self._pinned_fp:
@@ -194,7 +295,11 @@ class DataHandler(Component):
                 self._pinned_fp = msg.layout_fp
             self._cached_layout, self._cached_buf = layout, buf.copy()
             self._params_epoch = msg.epoch
-            return flatbuf.unpack(layout, jnp.asarray(self._cached_buf))
+            # numpy views into the cached buffer — no eager per-leaf jax
+            # dispatch; the jitted grad fn device_puts them on call (the
+            # leaf-count-many slice ops here used to dominate a handler's
+            # round at many-silo scale)
+            return wire.unpack_np(layout, self._cached_buf)
         if msg.kind == wire.KIND_DELTA:
             if self._cached_buf is None:
                 raise wire.StaleParamsError(
@@ -209,57 +314,52 @@ class DataHandler(Component):
             self._cached_buf = wire.apply_delta(self._cached_layout,
                                                 self._cached_buf, msg)
             self._params_epoch = msg.epoch
-            return flatbuf.unpack(self._cached_layout,
-                                  jnp.asarray(self._cached_buf))
+            return wire.unpack_np(self._cached_layout, self._cached_buf)
         raise wire.WireFormatError(
             f"{self.name}: unexpected wire kind {msg.kind} in params sync")
 
     def _masked_contrib(self, pipe: DPPipeline, grads, active,
-                        keys: BarrierKeys, state: NoiseState, clip_bound):
+                        keys: BarrierKeys, state: NoiseState, clip_bound,
+                        admin_row=None):
         """The handler's norm -> clip_scale -> silo_contribution stages as
-        ONE jitted dispatch (cached per engine configuration): the per-round
-        protocol cost is the codec + channel crypto, not hundreds of eager
-        op dispatches through the mask construction. The admin-mask and
-        perleaf constructions keep the eager path — they rely on concrete
+        ONE jitted dispatch, shared by every handler of the session (the
+        silo index is a traced argument — see ``_shared_pipe_fn``): the
+        per-round protocol cost is the codec + channel crypto, not hundreds
+        of eager op dispatches or n XLA compiles. The admin-mask and perleaf
+        constructions keep the eager path — they rely on concrete
         participation sets (single-row reconstruction / full-ring guard)."""
         if pipe.priv.mask_mode == "admin" or pipe.policy.mode != "packed":
             norm = pipe.norm_tree(grads)
             scale = pipe.clip_scale(norm, clip_bound)
             return pipe.silo_contribution(grads, self.silo_idx, scale,
-                                          active, keys, state, clip_bound), \
-                norm
-        cache_key = (pipe.priv, pipe.layout, pipe.n_silos, pipe.policy,
-                     state.prev_active is None)
-        if self._pipe_key != cache_key:
-            silo = self.silo_idx
-
-            def fn(g, active, keys, state, bound):
-                norm = pipe.norm_tree(g)
-                scale = pipe.clip_scale(norm, bound)
-                return pipe.silo_contribution(g, silo, scale, active, keys,
-                                              state, bound), norm
-
-            self._pipe_fn, self._pipe_key = jax.jit(fn), cache_key
-        return self._pipe_fn(grads, active, keys, state,
-                             jnp.asarray(clip_bound, jnp.float32))
+                                          active, keys, state, clip_bound,
+                                          admin_row=admin_row), norm
+        fn = _shared_pipe_fn(pipe, state.prev_active is not None)
+        return fn(grads, jnp.asarray(self.silo_idx, jnp.int32), active,
+                  keys, state, jnp.asarray(clip_bound, jnp.float32))
 
     def compute_update(self, params_blob: bytes, grad_fn: Callable,
                        priv: PrivacyConfig, keys: BarrierKeys, n_silos: int,
                        clip_bound: float, active=None,
                        noise_state: Optional[NoiseState] = None,
-                       verdicts=None) -> bytes:
+                       verdicts=None, admin_row=None) -> bytes:
         """``active``: this round's participation set distributed by the
         admin alongside the step keys — the zero-sum ring and this silo's
         noise share are built over the actual contributors. ``noise_state``
         carries the admin's step-(t-1) key for the lambda correction.
         ``verdicts``: the per-silo budget verdict vector. With a wired
-        ``admin`` (the normal session setup) the handler fetches the
-        verdicts from that attested component itself and ignores the
-        caller's value, so an untrusted training driver can neither omit
-        nor fabricate them — enforcement sits inside the TEE boundary."""
+        ``admin`` (the normal session setup) the handler asks that attested
+        component for its OWN verdict and ignores the caller's value, so an
+        untrusted training driver can neither omit nor fabricate it —
+        enforcement sits inside the TEE boundary. ``admin_row``: admin-mode
+        O(P) fan-out — the ``(closing, row_tree)`` pair the admin
+        distributed; only the closing silo consumes it."""
         if self.admin is not None:
-            verdicts = self.admin.verdicts()
-        if verdicts is not None and not bool(np.asarray(verdicts)[self.silo_idx]):
+            allowed = self.admin.verdict_for(self.silo_idx)
+        else:
+            allowed = verdicts is None or \
+                bool(np.asarray(verdicts)[self.silo_idx])
+        if not allowed:
             raise PermissionError(
                 f"silo {self.silo_idx}: owner's privacy budget is exhausted "
                 f"(ledger verdict); refusing to compute an update")
@@ -271,8 +371,11 @@ class DataHandler(Component):
             else jnp.asarray(active, jnp.bool_)
         state = noise_state if noise_state is not None \
             else init_state(jnp.zeros((2,), jnp.uint32), n_silos=n_silos)
+        row = admin_row[1] if admin_row is not None \
+            and self.silo_idx == admin_row[0] else None
         contrib, norm = self._masked_contrib(pipe, grads, active, keys,
-                                             state, clip_bound)
+                                             state, clip_bound,
+                                             admin_row=row)
         if self.codec == "packed":
             # ship the packed (P,) buffer straight off the DP engine — one
             # contiguous memoryview into the channel, no tree re-traversal
@@ -286,68 +389,219 @@ class DataHandler(Component):
             payload = _ser({"update": pipe.finalize(contrib),
                             "loss": jnp.asarray(loss), "norm": norm},
                            codec="pickle")
-        return self.channel.send(payload)
+        blob = self.channel.send(payload)
+        # the leaf this handler reports to the admin for the round's Merkle
+        # batch tag: a digest of the ENTIRE channel blob (counter prefix
+        # included), so a substituted, truncated or cross-round-replayed
+        # blob cannot sit under the round's root
+        self.last_leaf = hashlib.sha256(blob).digest()
+        return blob
 
 
 @dataclass
 class ModelUpdater(Component):
     """Single component for the model owner: aggregates masked updates and
     applies the (sandboxed) model-updating code. Never sees raw gradients;
-    the aggregate is divided by the silos that actually contributed."""
+    the aggregate is divided by the silos that actually contributed.
+
+    Many-silo scale-out (ISSUE 7): per-message authentication runs through
+    the round's Merkle batch tag when the admin provides one (one keyed HMAC
+    per round + an O(log n) path per message instead of n full HMAC passes —
+    see core/tee/merkle.py), accumulation can shard over worker threads
+    (``shard_workers``; bit-identical to the serial fold), and out-of-order
+    arrivals are staged and flushed in the round's expected silo order so
+    the sum's fp association never depends on scheduling."""
     channels: dict = field(default_factory=dict)
     received_updates: list = field(default_factory=list)
+    # admin<->updater aggregation key for batch tags (KDS-released against
+    # both components' attestation measurements)
+    agg_key: Optional[bytes] = None
+    # parameter-axis accumulation threads; 0/1 = serial left fold
+    shard_workers: int = 0
+    # audit-trail bound: received_updates keeps the newest entries only (at
+    # 400 silos an unbounded trail pins n*P floats per round forever)
+    received_cap: int = 256
 
-    def begin_round(self, params) -> dict:
+    def verify_batch_tag(self, batch: dict) -> None:
+        """Check the round-level MAC binding (round, leaf count, Merkle
+        root) under the admin<->updater aggregation key."""
+        if self.agg_key is None:
+            raise wire.WireFormatError(
+                "updater holds no aggregation key: cannot verify a Merkle "
+                "batch tag (was the updater attested and keyed via the KDS?)")
+        mac = hmac.new(self.agg_key,
+                       b"batch-mac-v1"
+                       + struct.pack("<QI", batch["round"],
+                                     len(batch["names"]))
+                       + batch["root"], hashlib.sha256).digest()
+        if not hmac.compare_digest(mac, batch["mac"]):
+            raise wire.WireFormatError(
+                "batch tag MAC verification failed (forged or tampered "
+                "batch tag); refusing the round")
+
+    def begin_round(self, params, expected=None, batch=None,
+                    batch_mode: bool = False) -> dict:
         """Open a streaming aggregation round: updates are ingested one at a
-        time (in silo order — the sum's fp association is part of the
-        cross-tier bit-parity contract) as handlers produce them, so
-        decrypt+accumulate of silo i overlaps silo i+1's compute."""
+        time as handlers produce them, so decrypt+accumulate of silo i
+        overlaps silo i+1's compute.
+
+        ``expected``: the round's handler names in silo order. Arrivals are
+        staged and flushed in exactly this order (the sum's fp association
+        is part of the cross-tier bit-parity contract), so out-of-order
+        ingestion is safe; a round closing with members missing fails.
+        Without it, arrival order is trusted (the legacy single-caller path).
+
+        ``batch``: the admin's Merkle batch tag — verified now, each
+        message's leaf checked against its O(log n) path at ingest, and the
+        per-message channel HMAC skipped. ``batch_mode=True`` without a tag
+        defers verification to :meth:`finish_round` (the pipelined runner
+        streams updates before the admin has seen every leaf); leaves are
+        recorded per message and the aggregate only commits after the late
+        tag verifies every one of them."""
+        if batch is not None:
+            self.verify_batch_tag(batch)
+            if expected is None:
+                expected = list(batch["names"])
+            elif list(expected) != list(batch["names"]):
+                raise wire.WireFormatError(
+                    "round's expected silo order disagrees with the batch "
+                    "tag's leaf order")
+            batch_mode = True
+        expected = list(expected) if expected is not None else None
         return {"layout": flatbuf.layout_of(params), "params": params,
-                "total": None, "losses": []}
+                "total": None, "acc": None, "losses": [],
+                "expected": expected,
+                "expected_set": set(expected) if expected is not None
+                else None,
+                "next": 0, "pending": {}, "seen": set(),
+                "batch": batch, "batch_mode": batch_mode, "leaves": []}
+
+    def _accumulate(self, rs: dict, buf: np.ndarray, loss: float) -> None:
+        """One buffer into the round total, in flush order. The first buffer
+        seeds either the serial fold or the sharded accumulator — both
+        reproduce the serial left fold bitwise (see _ShardedAccumulator)."""
+        rs["losses"].append(loss)
+        if rs["acc"] is not None:
+            rs["acc"].add(buf)
+        elif rs["total"] is None:
+            if self.shard_workers > 1:
+                rs["acc"] = _ShardedAccumulator(buf, self.shard_workers)
+            else:
+                rs["total"] = buf
+        else:
+            rs["total"] = rs["total"] + buf
 
     def ingest(self, round_state: dict, silo: str, blob: bytes) -> None:
-        """Decrypt + decode + accumulate one handler's sealed update.
-        Packed KIND_UPDATE messages accumulate directly on the flat ``(P,)``
-        buffers (``np.frombuffer`` views — zero deserialization); legacy
-        pickle payloads are packed into the same buffers first. Both give
-        bit-identical aggregates (packing is a permutation with zero
-        padding; slicing commutes with the silo-ordered sum)."""
-        layout = round_state["layout"]
-        raw = self.channels[silo].recv(blob)
+        """Authenticate + decrypt + decode + accumulate one handler's sealed
+        update. Packed KIND_UPDATE messages accumulate directly on the flat
+        ``(P,)`` buffers (``np.frombuffer`` views — zero deserialization);
+        legacy pickle payloads are packed into the same buffers first. Both
+        give bit-identical aggregates (packing is a permutation with zero
+        padding; slicing commutes with the silo-ordered sum).
+
+        A duplicate silo in one round is rejected before any crypto runs;
+        with a batch tag, a message whose digest is not under the round's
+        Merkle root is rejected here — detected AND attributed."""
+        rs = round_state
+        if silo in rs["seen"]:
+            raise wire.WireFormatError(
+                f"{silo}: duplicate update in one round (rejected)")
+        if rs["expected_set"] is not None and silo not in rs["expected_set"]:
+            raise wire.WireFormatError(
+                f"{silo}: update from a silo outside this round's "
+                f"expected set (rejected)")
+        rs["seen"].add(silo)
+        batch = rs["batch"]
+        if batch is not None:
+            leaf = hashlib.sha256(blob).digest()
+            path = batch["paths"].get(silo)
+            if path is None or not merkle.verify_path(batch["root"], leaf,
+                                                      path):
+                raise wire.WireFormatError(
+                    f"{silo}: sealed update does not match the round's "
+                    f"Merkle batch tag (tampered or substituted in "
+                    f"transit); update rejected")
+            raw = self.channels[silo].recv(blob, verify=False)
+        elif rs["batch_mode"]:
+            # tag arrives at finish_round: record the leaf now, decrypt
+            # optimistically, commit nothing until every leaf verifies
+            rs["leaves"].append((silo, hashlib.sha256(blob).digest()))
+            raw = self.channels[silo].recv(blob, verify=False)
+        else:
+            raw = self.channels[silo].recv(blob)
+        layout = rs["layout"]
         msg = wire.decode(raw)
         if msg.kind == wire.KIND_UPDATE:
             buf, loss, _norm = wire.decode_update(msg, layout)
             self.received_updates.append(jax.tree.map(
                 np.asarray, wire.unpack_np(layout, buf, dtype=np.float32)))
-            round_state["losses"].append(loss)
         else:
             payload = wire.decode_tree(raw)
             self.received_updates.append(
                 jax.tree.map(np.asarray, payload["update"]))
-            round_state["losses"].append(float(payload["loss"]))
+            loss = float(payload["loss"])
             buf = wire.pack_np(layout, payload["update"])
+        if len(self.received_updates) > self.received_cap:
+            del self.received_updates[:-self.received_cap]
         # both sides are fp32 by wire contract (decode_update / pack_np):
         # a plain add keeps the ingestion path copy-free
-        total = round_state["total"]
-        round_state["total"] = buf if total is None else total + buf
+        if rs["expected"] is None:
+            self._accumulate(rs, buf, loss)
+            return
+        rs["pending"][silo] = (buf, loss)
+        exp, nxt = rs["expected"], rs["next"]
+        while nxt < len(exp) and exp[nxt] in rs["pending"]:
+            b, l = rs["pending"].pop(exp[nxt])
+            self._accumulate(rs, b, l)
+            nxt += 1
+        rs["next"] = nxt
 
     def finish_round(self, round_state: dict, update_fn: Callable,
-                     lr: float):
-        """Close the round: divide by the actual contribution count and run
-        the (sandbox-supplied) model-updating code."""
-        n_contrib = max(len(round_state["losses"]), 1)
+                     lr: float, batch: Optional[dict] = None):
+        """Close the round: verify a deferred batch tag (every recorded leaf
+        must sit under the MACed root — failures are attributed by silo and
+        the aggregate is DISCARDED, not committed), check the expected set
+        is complete, divide by the actual contribution count and run the
+        (sandbox-supplied) model-updating code."""
+        rs = round_state
+        if rs["batch_mode"] and rs["batch"] is None:
+            if batch is None:
+                raise wire.WireFormatError(
+                    "round opened in batch-MAC mode but closed without a "
+                    "batch tag; aggregate discarded")
+            self.verify_batch_tag(batch)
+            bad = []
+            for silo, leaf in rs["leaves"]:
+                path = batch["paths"].get(silo)
+                if path is None or not merkle.verify_path(batch["root"],
+                                                          leaf, path):
+                    bad.append(silo)
+            if bad:
+                raise wire.WireFormatError(
+                    f"batch tag verification failed for {', '.join(bad)}: "
+                    f"sealed update(s) do not match the round's Merkle "
+                    f"root (tampered or substituted); aggregate discarded")
+        if rs["expected"] is not None and rs["next"] != len(rs["expected"]):
+            missing = [s for s in rs["expected"][rs["next"]:]
+                       if s not in rs["pending"]]
+            raise wire.WireFormatError(
+                f"round closed with updates missing from "
+                f"{', '.join(missing)}; aggregate discarded")
+        total = rs["acc"].result() if rs["acc"] is not None else rs["total"]
+        n_contrib = max(len(rs["losses"]), 1)
         mean_update = wire.unpack_np(
-            round_state["layout"],
-            round_state["total"] / np.float32(n_contrib), dtype=np.float32)
-        new_params = update_fn(round_state["params"], mean_update, lr)
-        return new_params, float(np.mean(round_state["losses"]))
+            rs["layout"], total / np.float32(n_contrib), dtype=np.float32)
+        new_params = update_fn(rs["params"], mean_update, lr)
+        return new_params, float(np.mean(rs["losses"]))
 
     def aggregate(self, blobs: dict, params, update_fn: Callable, lr: float,
-                  n_silos: Optional[int] = None):
+                  n_silos: Optional[int] = None,
+                  batch: Optional[dict] = None):
         """``n_silos`` is accepted for call-site compatibility but the
         divisor is the actual contribution count (len(blobs)) — dropped
-        silos shrink the mean, matching the SPMD tiers."""
-        rs = self.begin_round(params)
+        silos shrink the mean, matching the SPMD tiers. ``batch``: the
+        round's Merkle batch tag (per-ingest path verification)."""
+        rs = self.begin_round(params, expected=list(blobs), batch=batch)
         for silo, blob in blobs.items():
             self.ingest(rs, silo, blob)
         return self.finish_round(rs, update_fn, lr)
@@ -363,6 +617,9 @@ class Admin(Component):
     ledger: Optional[PrivacyLedger] = None
     n_silos: int = 0
     noise_state: Optional[NoiseState] = None
+    # admin<->updater aggregation key for Merkle batch tags (KDS-released)
+    agg_key: Optional[bytes] = None
+    _verdict_cache: Optional[tuple] = field(default=None, repr=False)
 
     # legacy spelling: the ledger *is* the session accountant
     @property
@@ -378,10 +635,55 @@ class Admin(Component):
 
     def verdicts(self) -> np.ndarray:
         """Per-silo budget verdicts the admin distributes with the step keys
-        (True = the owner still has budget). All-allowed without a ledger."""
+        (True = the owner still has budget). All-allowed without a ledger.
+
+        The vector is cached per ledger state (steps, session budget, the
+        per-silo budget table): verdicts only move when the ledger records a
+        round or an operator edits budgets, so n handlers asking in one
+        round cost one ledger sweep, not n — O(n) per round instead of
+        O(n^2) at 400 silos."""
         if self.ledger is None:
             return np.ones(max(self.n_silos, 1), bool)
-        return self.ledger.allowed_mask()
+        fp = (self.ledger.steps, self.ledger.epsilon_budget,
+              tuple(sorted(self.ledger.budgets.items())))
+        if self._verdict_cache is None or self._verdict_cache[0] != fp:
+            self._verdict_cache = (fp, self.ledger.allowed_mask())
+        return self._verdict_cache[1]
+
+    def verdict_for(self, silo: int) -> bool:
+        """One silo's budget verdict, O(1) against the cached vector."""
+        return bool(np.asarray(self.verdicts())[silo])
+
+    def batch_tag(self, leaves: list, round_id: int) -> dict:
+        """Build the round's Merkle batch tag over ``[(name, leaf), ...]``
+        in silo order (see core/tee/merkle.py): one tree over the sealed-
+        blob digests, one keyed HMAC binding (round, leaf count, root) under
+        the admin<->updater aggregation key, and each silo's O(log n)
+        authentication path keyed by handler name."""
+        if self.agg_key is None:
+            raise ValueError(
+                "admin holds no aggregation key: cannot issue a Merkle "
+                "batch tag (was the admin attested and keyed via the KDS?)")
+        names = [name for name, _ in leaves]
+        tree = merkle.MerkleTree([leaf for _, leaf in leaves])
+        mac = hmac.new(self.agg_key,
+                       b"batch-mac-v1"
+                       + struct.pack("<QI", round_id, len(names))
+                       + tree.root, hashlib.sha256).digest()
+        return {"round": int(round_id), "names": names, "root": tree.root,
+                "mac": mac,
+                "paths": {name: tree.path(i)
+                          for i, name in enumerate(names)}}
+
+    def closing_mask_row(self, priv: PrivacyConfig, template, keys,
+                         active, state, clip_bound):
+        """The admin-mode closing row, computed ONCE per round on the admin
+        and distributed to the one closing handler — O(P) admin fan-out
+        instead of every handler regenerating all n mask rows (the (n, P)
+        stack) to reconstruct it. Returns ``(closing_index, row)``."""
+        pipe = DPPipeline(priv, flatbuf.layout_of(template), self.n_silos)
+        return pipe.admin_closing_row(template, active, keys, state,
+                                      clip_bound)
 
     def state_for_step(self) -> NoiseState:
         """The correction state handlers need this round (prev step's 32-byte
@@ -404,7 +706,7 @@ class Admin(Component):
         if self.ledger is not None:
             self.ledger.record(np.asarray(active))
 
-    def sign_spend_report(self) -> dict:
+    def sign_spend_report(self, round_trip_s: Optional[dict] = None) -> dict:
         """The ledger's spend report, HMAC-signed with a key derived from
         this admin's attestation identity — the hardware-root signature over
         its measured report, which is NOT embedded in the output: a verifier
@@ -412,10 +714,14 @@ class Admin(Component):
         trust), so a driver holding only the JSON can neither verify nor
         re-sign a tampered body. Verify with
         :func:`repro.analysis.report.verify_spend_report(report,
-        attestation_service)` (ROADMAP: ledger-signed spend reports)."""
+        attestation_service)` (ROADMAP: ledger-signed spend reports).
+
+        ``round_trip_s``: per-silo round-trip EMAs (SiloTelemetry.snapshot)
+        folded into the per-silo rows BEFORE signing, so the operator's
+        latency view carries the same integrity as the spend columns."""
         if self.ledger is None:
             raise ValueError("admin has no ledger to report on")
-        report = self.ledger.spend_report()
+        report = self.ledger.spend_report(round_trip_s=round_trip_s)
         if self.report is None:
             return report  # unattested admin: plain report, nothing to bind
         signed = dict(report)

@@ -1,0 +1,92 @@
+"""Merkle batch-MAC over a round's sealed updates (many-silo scale-out).
+
+At n=400 silos the updater's per-round authentication cost used to be n full
+HMAC passes over the sealed blobs (two HKDF derivations + a keyed SHA-256
+sweep per message). The batch construction amortizes that to ONE keyed HMAC
+per round plus an O(log n) path check per message:
+
+* every handler still encrypt-then-MACs its own update (nothing about the
+  channel construction changes — a tampered blob also fails the per-message
+  tag, this layer just lets the updater skip recomputing it);
+* each handler reports the 32-byte digest of its sealed blob (the *leaf*)
+  to the admin over their authenticated control channel;
+* the admin builds a Merkle tree over the round's leaves in silo order and
+  HMACs ``batch-mac-v1 || round || n || root`` with the admin<->updater
+  aggregation key (released through the KDS against both components'
+  attestation measurements);
+* the updater checks the one root MAC, then each message's leaf against its
+  O(log n) authentication path — so a tampered (or substituted, or
+  cross-round-replayed) blob is still DETECTED and ATTRIBUTED to the silo
+  whose path fails, before the aggregate commits.
+
+The leaf binds the entire channel blob including the replay counter prefix,
+so the channel's monotone-counter replay protection is unchanged: a replayed
+blob either trips the counter or mismatches this round's tree.
+
+Tree shape: leaves are hashed with a ``0x00`` domain-separation prefix and
+interior nodes with ``0x01`` (no second-preimage games between the two
+levels); an odd node at any level is promoted unchanged, and the MAC binds
+the leaf *count*, so trees over different n never collide.
+"""
+from __future__ import annotations
+
+import hashlib
+
+
+def leaf_hash(leaf: bytes) -> bytes:
+    """Domain-separated hash of one leaf (itself typically a sealed-blob
+    digest — hashing again costs 32 bytes, not another pass over the blob)."""
+    return hashlib.sha256(b"\x00" + leaf).digest()
+
+
+def node_hash(left: bytes, right: bytes) -> bytes:
+    return hashlib.sha256(b"\x01" + left + right).digest()
+
+
+class MerkleTree:
+    """Tree over an ordered leaf list; O(n) build, O(log n) paths."""
+
+    def __init__(self, leaves: list):
+        if not leaves:
+            raise ValueError("Merkle tree over zero leaves is undefined")
+        level = [leaf_hash(l) for l in leaves]
+        self.levels = [level]
+        while len(level) > 1:
+            nxt = [node_hash(level[i], level[i + 1])
+                   for i in range(0, len(level) - 1, 2)]
+            if len(level) % 2:
+                nxt.append(level[-1])  # odd node promoted unchanged
+            level = nxt
+            self.levels.append(level)
+
+    @property
+    def root(self) -> bytes:
+        return self.levels[-1][0]
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.levels[0])
+
+    def path(self, index: int) -> list:
+        """Authentication path for leaf ``index``: [(sibling, is_right), ...]
+        bottom-up, where ``is_right`` says the *current* node is the right
+        child (levels where the node is promoted unpaired contribute no
+        entry — verification is self-synchronizing on the stored flags)."""
+        if not 0 <= index < self.n_leaves:
+            raise IndexError(f"leaf {index} out of range (n={self.n_leaves})")
+        out = []
+        for level in self.levels[:-1]:
+            sib = index ^ 1
+            if sib < len(level):
+                out.append((level[sib], bool(index & 1)))
+            index //= 2
+        return out
+
+
+def verify_path(root: bytes, leaf: bytes, path: list) -> bool:
+    """Does ``leaf`` sit under ``root`` via ``path``? Constant 64-byte hashes
+    per level — the updater's whole per-message authentication cost."""
+    h = leaf_hash(leaf)
+    for sibling, is_right in path:
+        h = node_hash(sibling, h) if is_right else node_hash(h, sibling)
+    return h == root

@@ -55,6 +55,11 @@ class SiloTelemetry:
     def ema(self, silo: int) -> Optional[float]:
         return self._ema.get(silo)
 
+    def snapshot(self) -> dict:
+        """All observed EMAs (silo -> seconds) — the per-silo round-trip
+        view the admin folds into the signed spend report."""
+        return dict(self._ema)
+
     def slowest(self, candidates: Sequence[int]) -> Optional[int]:
         """The slowest silo among ``candidates`` — None when no candidate
         has an observation yet (caller falls back to its placeholder)."""

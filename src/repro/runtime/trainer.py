@@ -162,8 +162,12 @@ class Trainer:
                 self.membership.exclude(silo, step=step, reason="budget")
 
     def spend_report(self) -> Optional[dict]:
-        """The ledger's admin-plane spend report (None without privacy)."""
-        return self.accountant.spend_report() if self.accountant else None
+        """The ledger's admin-plane spend report (None without privacy),
+        with per-silo round-trip EMAs when telemetry has observations."""
+        if not self.accountant:
+            return None
+        return self.accountant.spend_report(
+            round_trip_s=self.telemetry.snapshot())
 
     # -- preemption --------------------------------------------------------
     def install_preemption_handler(self):

@@ -168,7 +168,8 @@ def test_fast_keystream_deterministic_and_nonce_separated():
 # session-level: delta broadcast, resync, pipelined rounds, signed reports
 
 
-def _session_fixture(codec="packed", n=4, sigma=0.05, budgets=None):
+def _session_fixture(codec="packed", n=4, sigma=0.05, budgets=None,
+                     mask_mode="pairwise", **kw):
     from repro.api import CollaborativeSession
     from repro.configs.paper_models import MNIST_MLP3
     from repro.data.synthetic import synthetic_mnist
@@ -180,8 +181,9 @@ def _session_fixture(codec="packed", n=4, sigma=0.05, budgets=None):
     sess = CollaborativeSession.from_silos(
         [{"x": jnp.asarray(s.x), "y": jnp.asarray(s.y)}
          for s in train.split(n)],
-        PrivacyConfig(enabled=True, sigma=sigma, clip_bound=1.0),
-        codec=codec, params_template=params, silo_budgets=budgets)
+        PrivacyConfig(enabled=True, sigma=sigma, clip_bound=1.0,
+                      mask_mode=mask_mode),
+        codec=codec, params_template=params, silo_budgets=budgets, **kw)
 
     def grad_fn(p, data):
         return jax.value_and_grad(sm.loss)(p, data)
@@ -451,3 +453,217 @@ def test_static_fast_path_bit_identical_to_dynamic():
         assert int(pipe.next_active(i, full)) == \
             int(pipe.next_active(i, jnp.asarray(np.ones(N, bool))))
         assert int(pipe.next_active(i, full)) == (i + 1) % N
+
+
+# ---------------------------------------------------------------------------
+# many-silo scale-out: Merkle batch-MAC, sharded accumulation, admin fan-out
+
+
+def test_merkle_paths_verify_across_sizes():
+    from repro.core.tee import merkle
+
+    for n in range(1, 10):  # covers odd counts -> promoted unpaired nodes
+        leaves = [hashlib.sha256(bytes([i]) * 8).digest() for i in range(n)]
+        tree = merkle.MerkleTree(leaves)
+        assert tree.n_leaves == n
+        for i, leaf in enumerate(leaves):
+            path = tree.path(i)
+            assert len(path) <= max(n - 1, 0).bit_length()
+            assert merkle.verify_path(tree.root, leaf, path)
+            # a different leaf under the same path must not verify
+            assert not merkle.verify_path(tree.root, b"\x00" * 32, path)
+        bad_root = bytes([tree.root[0] ^ 1]) + tree.root[1:]
+        assert not merkle.verify_path(bad_root, leaves[0], tree.path(0))
+    # domain separation: a one-leaf root is the PREFIXED hash, not the leaf
+    one = merkle.MerkleTree([b"\x11" * 32])
+    assert one.root == merkle.leaf_hash(b"\x11" * 32) != b"\x11" * 32
+    with pytest.raises(ValueError, match="zero leaves"):
+        merkle.MerkleTree([])
+    with pytest.raises(IndexError, match="out of range"):
+        merkle.MerkleTree([b"x"]).path(1)
+
+
+def test_tampered_update_in_batch_detected_and_attributed():
+    """One flipped byte in one sealed update: the round's Merkle batch tag
+    catches it AND names the silo, before anything commits."""
+    sess, params, grad_fn, update_fn = _session_fixture()
+    assert sess.batch_mac  # default-on for the packed codec
+    params, _ = sess.step(0, params, grad_fn, update_fn, lr=0.5)
+    plan = sess._admin_plane(1)
+    updates = sess._collect_updates(params, plan, grad_fn)
+    victim = sess.handlers[2].name
+    blob = updates[victim]
+    updates[victim] = blob[:-1] + bytes([blob[-1] ^ 1])
+    batch = sess._batch_tag(1, updates)
+    with pytest.raises(wire.WireFormatError,
+                       match=f"{victim}.*Merkle batch tag"):
+        sess.updater.aggregate(updates, params, update_fn, lr=0.5,
+                               batch=batch)
+
+
+def test_forged_or_missing_batch_tag_rejected():
+    sess, params, grad_fn, update_fn = _session_fixture()
+    params, _ = sess.step(0, params, grad_fn, update_fn, lr=0.5)
+    plan = sess._admin_plane(1)
+    updates = sess._collect_updates(params, plan, grad_fn)
+    batch = sess._batch_tag(1, updates)
+    sess.updater.verify_batch_tag(batch)  # the genuine tag passes
+    forged = dict(batch)
+    forged["mac"] = bytes([batch["mac"][0] ^ 1]) + batch["mac"][1:]
+    with pytest.raises(wire.WireFormatError, match="forged or tampered"):
+        sess.updater.aggregate(updates, params, update_fn, lr=0.5,
+                               batch=forged)
+    # the MAC binds the round id: a cross-round replay of the tag fails
+    replayed = dict(batch)
+    replayed["round"] = 99
+    with pytest.raises(wire.WireFormatError, match="forged or tampered"):
+        sess.updater.verify_batch_tag(replayed)
+    # a round opened in batch mode cannot silently close without the tag
+    rs = sess.updater.begin_round(params, expected=list(updates),
+                                  batch_mode=True)
+    for name, blob in updates.items():
+        sess.updater.ingest(rs, name, blob)
+    with pytest.raises(wire.WireFormatError, match="without a batch tag"):
+        sess.updater.finish_round(rs, update_fn, 0.5, None)
+    # an unkeyed updater fails closed
+    sess.updater.agg_key = None
+    with pytest.raises(wire.WireFormatError, match="no aggregation key"):
+        sess.updater.verify_batch_tag(batch)
+
+
+def test_duplicate_and_uninvited_silo_updates_rejected():
+    sess, params, grad_fn, update_fn = _session_fixture()
+    params, _ = sess.step(0, params, grad_fn, update_fn, lr=0.5)
+    plan = sess._admin_plane(1)
+    updates = sess._collect_updates(params, plan, grad_fn)
+    names = list(updates)
+    rs = sess.updater.begin_round(params, expected=names,
+                                  batch=sess._batch_tag(1, updates))
+    sess.updater.ingest(rs, names[0], updates[names[0]])
+    with pytest.raises(wire.WireFormatError, match="duplicate update"):
+        sess.updater.ingest(rs, names[0], updates[names[0]])
+    with pytest.raises(wire.WireFormatError, match="expected set"):
+        sess.updater.ingest(rs, "gatecrasher", updates[names[1]])
+
+
+def test_out_of_order_ingest_bit_identical_to_serial():
+    """The updater's expected-order staging: updates arriving in REVERSE
+    silo order flush in silo order, so the sum's fp association — and the
+    committed params — are bit-identical to the serial loop."""
+    sess_a, params, grad_fn, update_fn = _session_fixture()
+    pa, la = sess_a.step(0, params, grad_fn, update_fn, lr=0.5)
+
+    sess_b, _, _, _ = _session_fixture()
+    plan = sess_b._admin_plane(0)
+    updates = sess_b._collect_updates(params, plan, grad_fn)
+    names = list(updates)
+    rs = sess_b.updater.begin_round(params, expected=names,
+                                    batch_mode=sess_b.batch_mac)
+    for name in reversed(names):  # scrambled arrival order
+        sess_b.updater.ingest(rs, name, updates[name])
+    pb, lb = sess_b.updater.finish_round(rs, update_fn, 0.5,
+                                         sess_b._batch_tag(0, updates))
+    tree_eq(pa, pb)
+    assert la == lb
+
+
+def test_missing_expected_update_discards_the_round():
+    sess, params, grad_fn, update_fn = _session_fixture()
+    params, _ = sess.step(0, params, grad_fn, update_fn, lr=0.5)
+    plan = sess._admin_plane(1)
+    updates = sess._collect_updates(params, plan, grad_fn)
+    names = list(updates)
+    rs = sess.updater.begin_round(params, expected=names,
+                                  batch=sess._batch_tag(1, updates))
+    for name in names[:-1]:
+        sess.updater.ingest(rs, name, updates[name])
+    with pytest.raises(wire.WireFormatError,
+                       match=f"missing from {names[-1]}"):
+        sess.updater.finish_round(rs, update_fn, 0.5)
+
+
+def test_sharded_accumulation_bit_identical_to_serial():
+    sess_a, params, grad_fn, update_fn = _session_fixture(shard_workers=0)
+    sess_b, _, _, _ = _session_fixture(shard_workers=4)
+    assert sess_a.updater.shard_workers == 0
+    assert sess_b.updater.shard_workers == 4
+    pa = pb = params
+    for t in range(3):
+        pa, la = sess_a.step(t, pa, grad_fn, update_fn, lr=0.5)
+        pb, lb = sess_b.step(t, pb, grad_fn, update_fn, lr=0.5)
+        assert la == lb
+    tree_eq(pa, pb)
+
+
+def test_many_silo_smoke_auto_tunes_and_completes():
+    """n=32: ``from_silos`` auto-enables sharded accumulation, batch-MAC is
+    on, and a pipelined round completes with every silo heard exactly once."""
+    sess, params, grad_fn, update_fn = _session_fixture(n=32)
+    assert sess.batch_mac
+    assert sess.updater.shard_workers == 4  # auto-on at n >= 32
+    params, losses = sess.run(params, grad_fn, update_fn, lr=0.5,
+                              n_rounds=1, pipelined=True)
+    assert len(losses) == 1 and sess.wire_stats["rounds"] == 1
+    assert sess.accountant.contributions == [32]  # all 32 silos, one round
+
+
+def test_admin_closing_row_distribution_bit_identical():
+    """The admin-computed closing row (O(P) fan-out) equals the row the
+    closing handler would regenerate locally — unit level and end to end."""
+    N = 4
+    priv = PrivacyConfig(enabled=True, sigma=0.5, clip_bound=1.0,
+                         noise_lambda=0.7, mask_mode="admin")
+    t = {"w": jnp.ones((5000,), jnp.float32), "b": jnp.ones((63,))}
+    pipe = DPPipeline(priv, flatbuf.layout_of(t), N)
+    keys = barrier_mod.step_keys(jax.random.PRNGKey(9),
+                                 jnp.zeros((), jnp.int32))
+    ns = NoiseState(prev_key=jnp.array([7, 8], jnp.uint32),
+                    has_prev=jnp.ones((), jnp.bool_),
+                    prev_active=jnp.ones((N,), jnp.bool_))
+    active = jnp.array([True, True, True, False])
+    closing, row = pipe.admin_closing_row(t, active, keys, ns, 1.0)
+    assert closing == 2  # the last ACTIVE silo closes the zero-sum
+    local = pipe.silo_contribution(t, closing, 0.9, active, keys, ns, 1.0)
+    dist = pipe.silo_contribution(t, closing, 0.9, active, keys, ns, 1.0,
+                                  admin_row=row)
+    tree_eq(local, dist)
+
+    # end to end: a session whose admin distributes the row vs one whose
+    # handlers rebuild it locally train bit-identically
+    sess_a, params, grad_fn, update_fn = _session_fixture(mask_mode="admin")
+    sess_b, _, _, _ = _session_fixture(mask_mode="admin")
+    sess_b.admin.closing_mask_row = lambda *a, **kw: None  # force local
+    pa = pb = params
+    for step in range(2):
+        pa, la = sess_a.step(step, pa, grad_fn, update_fn, lr=0.5)
+        pb, lb = sess_b.step(step, pb, grad_fn, update_fn, lr=0.5)
+        assert la == lb
+    tree_eq(pa, pb)
+
+
+def test_spend_report_carries_round_trip_telemetry():
+    """Per-silo round-trip timings (SiloTelemetry) ride INSIDE the signed
+    spend-report body and render as a table column."""
+    from repro.analysis.report import privacy_spend_table, verify_spend_report
+
+    sess, params, grad_fn, update_fn = _session_fixture()
+    for t in range(2):
+        params, _ = sess.step(t, params, grad_fn, update_fn, lr=0.5)
+    report = sess.privacy_report()
+    for s in report["silos"]:
+        assert s["avg_round_trip_ms"] is not None
+        assert s["avg_round_trip_ms"] > 0
+    # the timings are covered by the ledger signature...
+    att = sess.service.attestation
+    assert verify_spend_report(report, att)
+    # ...and tampering with a timing breaks it
+    import json
+    forged = json.loads(json.dumps(report))
+    forged["silos"][0]["avg_round_trip_ms"] = 0.001
+    assert not verify_spend_report(forged, att)
+    assert "rt (ms)" in privacy_spend_table(report, attestation=att)
+    # a report without telemetry renders without the column
+    bare = {k: v for k, v in report.items() if k != "signature"}
+    bare["silos"] = [{k: v for k, v in s.items()
+                      if k != "avg_round_trip_ms"} for s in bare["silos"]]
+    assert "rt (ms)" not in privacy_spend_table(bare)
