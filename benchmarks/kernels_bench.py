@@ -132,6 +132,31 @@ def run():
             emit(f"kernels/zsmask_tree_{impl}_l{n_leaves}",
                  timeit(f, elem_tree), impl=impl, shape=shape)
 
+        # the dp_pipeline rows run one (n, P) buffer through the two
+        # central-tier constructions at the repo's canonical 4-silo
+        # collaboration size (every paper config and test pairs 4 dataset
+        # owners): ``packed`` is the fixed-membership clip+sum+2-stream
+        # aggregate-noise composition, ``active_*`` is the elastic engine
+        # (per-silo sigma_c/sqrt(k) streams, ring masks, participation
+        # gating). active_set pays the dynamic-membership graph; an
+        # all-active set known at trace time takes the static fast path,
+        # whose only remaining cost over ``packed`` is the per-silo noise
+        # streams the cross-tier bit-parity contract requires — CI gates
+        # that overhead at 1.25x (see ``check``). The four rows are
+        # measured interleaved: they compare close variants of one graph,
+        # and host scheduling noise between separate timeit calls would
+        # dwarf the effect.
+        from repro.core.dp_pipeline import DPPipeline
+
+        n_silos = 4
+        silo_tree = {k: v[:n_silos] for k, v in tree.items()}
+        silo_layout = flatbuf.layout_of({k: v[0] for k, v in tree.items()})
+        batch_layout = flatbuf.layout_of(silo_tree, batch_dims=1)
+        pipe = DPPipeline(priv, silo_layout, n_silos)
+        active_drop = jnp.ones((n_silos,), jnp.bool_).at[1].set(False)
+        active_full = jnp.ones((n_silos,), jnp.bool_)
+        pshape = f"leaves={n_leaves},n={n_silos}"
+
         def pipeline_perleaf(t):
             summed, norms = dops.clip_and_sum_tree(t, 1.0, impl="perleaf")
             noisy, _ = barrier_mod.fused_noise(summed, priv, keys, nstate,
@@ -139,53 +164,85 @@ def run():
             return noisy
 
         def pipeline_packed(t):
-            lay = flatbuf.layout_of(t, batch_dims=1)
             from repro.kernels.dp_fused import ops as fused_ops
-            summed, norms = fused_ops.clip_sum_packed(flatbuf.pack(lay, t), 1.0)
+            summed, norms = fused_ops.clip_sum_packed(
+                flatbuf.pack(batch_layout, t), 1.0)
             noisy, _ = barrier_mod.fused_noise_packed(summed, priv, keys,
                                                       nstate, 1.0)
-            return flatbuf.unpack(lay, noisy, dtype=jnp.float32)
-
-        # elastic path: the same engine run with a per-step participation set
-        # (active-ring masks, per-stream sqrt(k) renormalization, active-set
-        # divisor) vs the static all-active fast path (active is a
-        # trace-time constant, so the engine skips the gating/ring work) —
-        # the row pair tracks the overhead of elastic silo membership on the
-        # hot path, and that it is paid only when membership is actually
-        # dynamic. The four dp_pipeline rows are measured interleaved: they
-        # compare close variants of one graph, and host scheduling noise
-        # between separate timeit calls would dwarf the effect.
-        from repro.core.dp_pipeline import DPPipeline
-
-        n_silos = B
-        silo_layout = flatbuf.layout_of({k: v[0] for k, v in tree.items()})
-        pipe = DPPipeline(priv, silo_layout, n_silos)
-        active_drop = jnp.ones((n_silos,), jnp.bool_).at[1].set(False)
-        active_full = jnp.ones((n_silos,), jnp.bool_)
+            return flatbuf.unpack(batch_layout, noisy, dtype=jnp.float32)
 
         def pipeline_active(t, active):
-            stacked = jax.vmap(
-                lambda tt: flatbuf.pack(silo_layout, tt))(t)  # (B, P)
+            # batch-pack rows are bitwise-equal to per-silo packs, minus
+            # the vmap dispatch overhead
+            stacked = flatbuf.pack(batch_layout, t)  # (n, P)
             noisy, _, _ = pipe.run_central(
                 stacked, pipe.norms(stacked), keys, nstate, 1.0,
                 keys.key_clip, active)
             return noisy
 
         us = timeit_interleaved([
-            (jax.jit(pipeline_perleaf), (tree,)),
-            (jax.jit(pipeline_packed), (tree,)),
-            (jax.jit(pipeline_active), (tree, active_drop)),
-            (jax.jit(lambda t: pipeline_active(t, active_full)), (tree,)),
+            (jax.jit(pipeline_perleaf), (silo_tree,)),
+            (jax.jit(pipeline_packed), (silo_tree,)),
+            (jax.jit(pipeline_active), (silo_tree, active_drop)),
+            (jax.jit(lambda t: pipeline_active(t, active_full)), (silo_tree,)),
         ])
         emit(f"kernels/dp_pipeline_perleaf_l{n_leaves}", us[0],
-             impl="perleaf", shape=shape)
+             impl="perleaf", shape=pshape)
         emit(f"kernels/dp_pipeline_packed_l{n_leaves}", us[1],
-             impl="packed", shape=shape)
+             impl="packed", shape=pshape)
         emit(f"kernels/dp_pipeline_active_set_l{n_leaves}", us[2],
-             impl="packed", shape=shape + f",k={n_silos - 1}/{n_silos}")
+             impl="packed", shape=pshape + f",k={n_silos - 1}/{n_silos}")
         emit(f"kernels/dp_pipeline_active_static_l{n_leaves}", us[3],
-             impl="packed", shape=shape + f",k={n_silos}/{n_silos} (static)")
+             impl="packed", shape=pshape + f",k={n_silos}/{n_silos} (static)")
+
+
+def check(json_path: str = "BENCH_kernels.json",
+          max_ratio: float = 1.25) -> None:
+    """CI gate on the elastic engine's hot path: the statically-full
+    participation set must stay within ``max_ratio`` of the fixed-membership
+    packed pipeline at the largest leaf count. The static fast path elides
+    every piece of elastic bookkeeping, so the only cost it is allowed to
+    keep over ``packed`` is the per-silo noise streams the cross-tier
+    bit-parity contract requires — all generated by the one-launch
+    ``noise_batch`` kernel. A regression here means either the batched noise
+    kernel stopped being one dispatch or the static path regrew dynamic-set
+    work."""
+    import json
+
+    with open(json_path) as f:
+        rows = json.load(f)
+    packed = rows["kernels/dp_pipeline_packed_l256"]["us_per_call"]
+    static = rows["kernels/dp_pipeline_active_static_l256"]["us_per_call"]
+    ratio = static / packed
+    line = (f"check: active_static_l256={static:.1f}us "
+            f"packed_l256={packed:.1f}us ratio={ratio:.3f} "
+            f"(gate {max_ratio:.2f}x)")
+    print(line)
+    if ratio > max_ratio:
+        raise SystemExit(f"FAIL {line}")
+    print("kernels-bench check OK")
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="gate dp_pipeline_active_static_l256 <= 1.25x "
+                         "dp_pipeline_packed_l256 from the written JSON "
+                         "(runs the benchmarks first if the file is absent)")
+    ap.add_argument("--json", default="BENCH_kernels.json",
+                    help="records file to check / write")
+    args = ap.parse_args()
+    if not args.check:
+        run()
+        return
+    if not os.path.exists(args.json):
+        from benchmarks.common import write_json
+        run()
+        write_json(args.json)
+    check(args.json)
 
 
 if __name__ == "__main__":
-    run()
+    main()

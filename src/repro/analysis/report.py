@@ -116,6 +116,87 @@ def privacy_spend_summary(path: str | Path) -> str:
     return privacy_spend_table(json.loads(Path(path).read_text()))
 
 
+# ---------------------------------------------------------------------------
+# Wire-bench tables (BENCH_wire.json, benchmarks/wire_bench.py)
+
+
+def wire_cost_split(results: dict) -> dict:
+    """Least-squares split of the silo-count sweep into fixed-per-round and
+    marginal-per-silo cost: us_per_round(n) ~= intercept + slope * n over
+    the ``wire/sweep_n*`` rows. The intercept is the amortizable protocol
+    floor (one dispatch graph, one batch HMAC, one broadcast encode, one
+    admin closing row); the slope is the irreducible per-party cost (one
+    sandboxed grad + mask + seal per silo). Needs >= 2 sweep rows."""
+    import numpy as np
+
+    pts = sorted((v["n_silos"], v["us_per_round"])
+                 for k, v in results.items() if k.startswith("wire/sweep_n"))
+    if len(pts) < 2:
+        raise ValueError(
+            f"cost split needs >= 2 wire/sweep_n* rows, found {len(pts)}")
+    ns = np.array([p[0] for p in pts], float)
+    ts = np.array([p[1] for p in pts], float)
+    # weight by 1/t: round time spans orders of magnitude across the sweep,
+    # so an unweighted fit is pure leverage from the largest n and can miss
+    # the small-n rows (where the fixed cost actually shows) by tens of
+    # percent; minimizing RELATIVE residuals treats every n as one sample
+    # of the same cost model
+    slope, intercept = np.polyfit(ns, ts, 1, w=1.0 / ts)
+    fit = intercept + slope * ns
+    resid = (ts - fit) / ts
+    return {"intercept_us": float(intercept), "slope_us_per_silo": float(slope),
+            "rows": [{"n_silos": int(n), "us_per_round": t,
+                      "fit_us": float(f), "resid_frac": float(r)}
+                     for n, t, f, r in zip(ns, ts, fit, resid)],
+            "max_resid_frac": float(abs(resid).max())}
+
+
+def wire_bench_table(path: str | Path = "BENCH_wire.json") -> str:
+    """Markdown summary of a wire-bench artifact: the sweep's fixed/per-silo
+    cost split and the pipelined-vs-speculative round comparison per
+    payload."""
+    results = json.loads(Path(path).read_text())
+    lines = []
+    try:
+        split = wire_cost_split(results)
+    except ValueError as e:
+        lines.append(f"(no cost split: {e})")
+    else:
+        lines += [
+            f"cost split (fit over wire/sweep_n*): fixed "
+            f"{split['intercept_us']:.0f}us/round + "
+            f"{split['slope_us_per_silo']:.1f}us/silo "
+            f"(max residual {split['max_resid_frac'] * 100:.1f}%)",
+            "",
+            "| n_silos | us/round | per-silo us | linear fit | resid |",
+            "|---|---|---|---|---|",
+        ]
+        for r in split["rows"]:
+            lines.append(
+                f"| {r['n_silos']} | {r['us_per_round']:.0f} "
+                f"| {r['us_per_round'] / r['n_silos']:.0f} "
+                f"| {r['fit_us']:.0f} | {r['resid_frac'] * 100:+.1f}% |")
+    scheds = ("serial", "pipelined", "speculative")
+    payloads = sorted(
+        {k.rsplit("_", 1)[-1] for k in results
+         if k.startswith("wire/round_packed_")},
+        key=lambda p: results[f"wire/round_packed_pipelined_{p}"]
+        ["payload_floats"])
+    if payloads:
+        lines += ["", "| payload | " + " | ".join(scheds)
+                  + " | spec vs pipelined |", "|---|---|---|---|---|"]
+        for p in payloads:
+            row = {s: results.get(f"wire/round_packed_{s}_{p}")
+                   for s in scheds}
+            cells = [f"{row[s]['us_per_round']:.0f}us" if row[s] else "—"
+                     for s in scheds]
+            ratio = "—"
+            if row["pipelined"] and row["speculative"]:
+                ratio = (f"{row['pipelined']['us_per_round'] / row['speculative']['us_per_round']:.2f}x")
+            lines.append(f"| {p} | " + " | ".join(cells) + f" | {ratio} |")
+    return "\n".join(lines)
+
+
 def load(mesh: str) -> dict:
     out = {}
     d = DRYRUN / mesh
@@ -189,6 +270,10 @@ if __name__ == "__main__":
     if kind == "privacy":
         # python -m repro.analysis.report privacy SPEND_report.json
         print(privacy_spend_summary(sys.argv[2]))
+    elif kind == "wire":
+        # python -m repro.analysis.report wire [BENCH_wire.json]
+        print(wire_bench_table(sys.argv[2] if len(sys.argv) > 2
+                               else "BENCH_wire.json"))
     else:
         mesh = sys.argv[2] if len(sys.argv) > 2 else "single"
         print(roofline_table(mesh) if kind == "roofline" else dryrun_summary(mesh))

@@ -684,7 +684,8 @@ class CollaborativeSession:
         return params, loss
 
     def run(self, params, grad_fn: Callable, update_fn: Callable, lr: float,
-            n_rounds: int, pipelined: bool = True):
+            n_rounds: int, pipelined: bool = True,
+            speculative: bool = False):
         """Drive ``n_rounds`` of the protocol. ``pipelined=True`` streams
         each handler's sealed update into the updater's ingestion thread as
         soon as it is produced (decrypt + decode + accumulate of silo i
@@ -696,8 +697,37 @@ class CollaborativeSession:
         updater and admin are separate trust domains with disjoint state, so
         the overlap changes nothing about the math — bit-identical to the
         serial loop. Per-party handler timings stay honest: each handler
-        round-trip is measured synchronously, as in :meth:`step`. Returns
-        (params, [per-round mean losses])."""
+        round-trip is measured synchronously, as in :meth:`step`.
+
+        ``speculative=True`` (implies pipelined) additionally lets handlers
+        begin round t+1's noise-stream work while round t's aggregation and
+        broadcast are still in flight, and — the structural win — reuse
+        round t's xi stream as round t+1's lambda-correction stream (the
+        admin's schedule makes them the same stream: ``advance`` sets
+        ``prev_key = raw(key_xi)``), eliminating one full P-length draw per
+        handler per round. Every speculated artifact is tagged with the raw
+        key bytes it was drawn under and consumed only on an exact tag
+        match, with cache misses falling back to an inline draw through the
+        same jit — so rekeys, resyncs (``StaleParamsError`` → full resync,
+        exactly the epoch-tag guard of the delta broadcast) and mid-round
+        membership changes degrade to the serial path rather than diverging.
+        Speculative rounds are bit-identical to serial :meth:`step` loops.
+        Returns (params, [per-round mean losses])."""
+        if speculative:
+            pipelined = True
+        spec_flags = [h.speculative for h in self.handlers]
+        if speculative:
+            for h in self.handlers:
+                h.speculative = True
+        try:
+            return self._run(params, grad_fn, update_fn, lr, n_rounds,
+                             pipelined, speculative)
+        finally:
+            for h, f in zip(self.handlers, spec_flags):
+                h.speculative = f
+
+    def _run(self, params, grad_fn: Callable, update_fn: Callable, lr: float,
+             n_rounds: int, pipelined: bool, speculative: bool):
         from concurrent.futures import ThreadPoolExecutor
 
         losses = []
@@ -741,6 +771,13 @@ class CollaborativeSession:
                 self.wire_stats["rounds"] += 1
                 next_plan = self._admin_plane(t + 1) \
                     if t + 1 < start + n_rounds else None
+                if speculative and next_plan is not None:
+                    # round t+1's xi streams drawn while round t's aggregate
+                    # + broadcast tail is still in the updater thread; the
+                    # key-tag cache makes a wrong guess a harmless miss
+                    for h in self.handlers:
+                        if next_plan["active"][h.silo_idx]:
+                            h.prefetch_round(next_plan["keys"])
                 params, loss = fut.result()
                 losses.append(loss)
                 plan = next_plan

@@ -70,6 +70,22 @@ from repro.kernels.dp_fused import ops as fused_ops
 NOISE_TREE = "dp_noise_tree"
 
 
+@jax.jit
+def _silo_stream(key, silo, idx):
+    """One silo's standard-normal stream over global packed indices — the
+    SAME counter construction the fused clip_mask graph draws in-graph.
+
+    This is the single shared jit behind every externally drawn xi/xp (the
+    wire tier's speculative rounds): a stream cached from round t and one
+    recomputed from the carried prev_key at t+1 are outputs of the same
+    compiled function on the same inputs, so stream reuse is bitwise
+    equal to recomputation BY CONSTRUCTION — no cross-graph FMA-contraction
+    exposure (two different jitted graphs of the same formula may disagree
+    by 1 ulp; one graph cannot disagree with itself)."""
+    from repro.kernels.dp_fused.ref import _stream
+    return _stream(key, idx, silo)
+
+
 def is_static_full(active) -> bool:
     """True iff the participation set is *statically* known to be all-active
     (``None``, or a concrete all-True array at trace time). The engine then
@@ -283,8 +299,19 @@ class DPPipeline:
             correction=self._admin_correction(template, state, bound))
         return closing, row
 
+    def noise_stream(self, key, silo) -> jax.Array:
+        """This silo's (P,) standard-normal stream for a 32-byte step key —
+        the exact values the fused graph would draw in-graph for xi (step
+        key) or xi_prev (carried prev_key). Drawn through one shared
+        standalone jit so the wire tier's speculative stream cache is
+        bitwise-equal to an inline recompute (see ``_silo_stream``)."""
+        idx = jnp.arange(self.layout.total, dtype=jnp.uint32)
+        return _silo_stream(jnp.asarray(key), jnp.asarray(silo, jnp.int32),
+                            idx)
+
     def silo_contribution(self, g_tree, silo, scale, active, keys: BarrierKeys,
-                          state: NoiseState, bound, admin_row=None):
+                          state: NoiseState, bound, admin_row=None,
+                          xi=None, xp=None):
         """One silo's wire contribution: clip + zero-sum mask over the active
         ring + its sigma_c/sqrt(k) noise share + its lambda-correction share,
         in one fused dispatch. Summing the active silos' outputs (psum on the
@@ -295,6 +322,11 @@ class DPPipeline:
         only; see :meth:`admin_closing_row`) — used instead of regenerating
         the row locally.
 
+        ``xi``/``xp``: externally drawn noise streams (packed pairwise mode
+        only — the speculative wire tier draws them via :meth:`noise_stream`
+        and reuses its round-t xi as round-(t+1)'s xi_prev, since the admin
+        carries exactly that key forward). ``None`` draws in-graph.
+
         Returns a packed (P,) buffer under the packed policy (psum it, then
         :meth:`finalize`), a pytree under perleaf (which supports the full
         ring only — elastic runs require the packed policy)."""
@@ -304,6 +336,12 @@ class DPPipeline:
         gate = 1.0 if static else active[silo].astype(jnp.float32)
         sigma_c = priv.sigma * jnp.asarray(bound, jnp.float32)
         use_prev = priv.noise_lambda > 0.0
+        if (xi is not None or xp is not None) and (
+                priv.mask_mode != "pairwise"
+                or self.policy.mode != "packed"):
+            raise ValueError(
+                "external xi/xp streams only apply to the packed pairwise "
+                "construction (admin/none/perleaf draw their own)")
         if priv.mask_mode == "none":
             # confidentiality-only sync: clipped gradient, no DP terms
             scaled = scale * gate
@@ -384,7 +422,7 @@ class DPPipeline:
             use_pairwise=True, use_prev=use_prev, impl=self.policy.inner,
             nxt=self.next_active(silo, active),
             noise_scale=s if static else s * gate,
-            prev_noise_scale=s_prev)
+            prev_noise_scale=s_prev, xi=xi, xp=xp)
 
     def finalize(self, agg):
         """Aggregated contribution -> fp32 gradient pytree (unpacks packed
@@ -400,40 +438,28 @@ class DPPipeline:
         *same* per-silo streams the barrier/wire tiers emit, accumulated
         sequentially in silo order (bit-identical to the wire updater's
         reduce). Dropped silos contribute no fresh noise; the correction
-        share of silo i applies iff it was active at t-1 and is active now."""
+        share of silo i applies iff it was active at t-1 and is active now.
+
+        All n streams are generated by ONE ``noise_batch`` dispatch (the
+        per-silo gates ride in as (n,) scale vectors — products of {0,1}
+        floats are exact, so gating-by-vector is bit-identical to the n
+        separate gated launches this replaces)."""
         priv = self.priv
         s, s_prev, pa = self._stream_scales(bound, active, state)
         kx = masking._raw(keys.key_xi)
         hp = jnp.where(state.has_prev, 1.0, 0.0)
         use_prev = priv.noise_lambda > 0.0
-        sigma_c = priv.sigma * jnp.asarray(bound, jnp.float32)
         static = is_static_full(active)
         pa_full = _static_all_true(pa)
-        # each silo's share is drawn on a zero buffer then added, so the fp
-        # association matches the wire updater's left-to-right reduce of
-        # per-silo contributions (bit-identical noise across tiers)
-        zeros = jnp.zeros_like(g_sum, jnp.float32)
-
-        def add_share(i, out):
-            gate = 1.0 if static else active[i].astype(jnp.float32)
-            pa_gate = 1.0 if pa_full else pa[i].astype(jnp.float32)
-            lam_gate = priv.noise_lambda * hp * gate * pa_gate
-            share = fused_ops.clip_mask_packed(
-                zeros, 1.0, kx, kx, state.prev_key, jnp.asarray(i, jnp.int32),
-                self.n_silos, sigma_c, 0.0, lam_gate, use_pairwise=False,
-                use_prev=use_prev, impl=self.policy.inner,
-                noise_scale=s if static else s * gate,
-                prev_noise_scale=s_prev)
-            return out + share
-
-        out = g_sum.astype(jnp.float32)
-        if self.n_silos <= 8:  # unrolled: lets XLA fuse the few-silo case
-            for i in range(self.n_silos):
-                out = add_share(i, out)
-            return out
-        # large deployments: a fori_loop keeps trace/compile size O(1) in
-        # n_silos (same sequential association, so numerics are unchanged)
-        return jax.lax.fori_loop(0, self.n_silos, add_share, out)
+        ones = jnp.ones((self.n_silos,), jnp.float32)
+        gates = ones if static else active.astype(jnp.float32)
+        pa_gates = ones if pa_full else \
+            jnp.asarray(pa).astype(jnp.float32)
+        noise_scales = s * gates
+        lam_gates = priv.noise_lambda * hp * gates * pa_gates
+        return fused_ops.noise_batch_packed(
+            g_sum, kx, state.prev_key, noise_scales, lam_gates, s_prev,
+            use_prev=use_prev, impl=self.policy.inner)
 
     def corrected_noise_tree(self, g_sum_tree, keys: BarrierKeys,
                              state: NoiseState, bound, active):
@@ -462,7 +488,11 @@ class DPPipeline:
                     state: NoiseState, bound, clip_key, active):
         """The whole stage graph for a central tier holding all silo grads as
         a stacked (n, P) packed buffer (the vmap-fused tier). Returns
-        (noisy fp32 tree, new_state, bound)."""
+        (noisy fp32 tree, new_state, bound). The staged chain deliberately
+        stays elementwise (no dot_general): XLA fuses it straight into the
+        noise epilogue, which measures faster than the fused ``clip_sum``
+        front end in the composed graph (see kernels_bench dp_pipeline
+        rows)."""
         bound = self.dynamic_bound(norms, active, clip_key, bound)
         scales = self.clip_scales(norms, bound, active)
         g_sum = self.masked_aggregate(g_stacked, scales)

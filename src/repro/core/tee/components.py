@@ -103,19 +103,42 @@ _PIPE_CACHE_MAX = 32
 _PIPE_CACHE_LOCK = threading.Lock()
 
 
-def _shared_pipe_fn(pipe: DPPipeline, has_prev_active: bool):
+def _shared_pipe_fn(pipe: DPPipeline, has_prev_active: bool,
+                    ext: str = "none"):
+    """``ext`` selects how the pairwise noise streams enter the graph:
+    ``'none'`` draws them in-graph (mask_mode 'none' / legacy callers);
+    ``'xi'`` / ``'xi+xp'`` take them as ARGUMENTS, drawn by the standalone
+    :meth:`DPPipeline.noise_stream` jit. The packed pairwise handler path
+    always uses the external form — serial and speculative rounds then run
+    the SAME compiled graph on the same stream values (cache hit or inline
+    redraw are the same jit's output), so speculative==serial bit-identity
+    holds by construction rather than by hoping two different XLA graphs
+    fuse identically."""
     key = (pipe.priv, pipe.layout, pipe.n_silos, pipe.policy,
-           has_prev_active)
+           has_prev_active, ext)
     with _PIPE_CACHE_LOCK:
         for k, fn in _PIPE_CACHE:
             if k == key:
                 return fn
 
-    def fn(g, silo, active, keys, state, bound):
-        norm = pipe.norm_tree(g)
-        scale = pipe.clip_scale(norm, bound)
-        return pipe.silo_contribution(g, silo, scale, active, keys,
-                                      state, bound), norm
+    if ext == "xi+xp":
+        def fn(g, silo, active, keys, state, bound, xi, xp):
+            norm = pipe.norm_tree(g)
+            scale = pipe.clip_scale(norm, bound)
+            return pipe.silo_contribution(g, silo, scale, active, keys,
+                                          state, bound, xi=xi, xp=xp), norm
+    elif ext == "xi":
+        def fn(g, silo, active, keys, state, bound, xi):
+            norm = pipe.norm_tree(g)
+            scale = pipe.clip_scale(norm, bound)
+            return pipe.silo_contribution(g, silo, scale, active, keys,
+                                          state, bound, xi=xi), norm
+    else:
+        def fn(g, silo, active, keys, state, bound):
+            norm = pipe.norm_tree(g)
+            scale = pipe.clip_scale(norm, bound)
+            return pipe.silo_contribution(g, silo, scale, active, keys,
+                                          state, bound), norm
 
     fn = jax.jit(fn)
     with _PIPE_CACHE_LOCK:
@@ -270,6 +293,20 @@ class DataHandler(Component):
         # digest of the last sealed update this handler emitted — the leaf
         # it reports to the admin for the round's Merkle batch tag
         self.last_leaf: Optional[bytes] = None
+        # speculative wire rounds: a tiny key-tagged cache of this silo's
+        # standard-normal streams. The admin's key schedule makes round
+        # t+1's lambda-correction stream (prev_key) the SAME stream as round
+        # t's xi (advance() sets prev_key = raw(key_xi)), so a handler that
+        # kept its round-t xi skips one full P-length threefry/Box-Muller
+        # draw per round — the dominant per-handler compute at large P. The
+        # cache key is the raw 8-byte key value itself, so a resync, rejoin
+        # or skipped round can never alias: wrong round => different key
+        # bytes => miss => inline draw through the SAME jit (bit-identical
+        # to the serial path by construction).
+        self.speculative: bool = False
+        self._stream_cache: dict = {}
+        self._spec_hits: int = 0
+        self._spec_pipe: Optional[DPPipeline] = None
 
     def _check_pin(self, fp: bytes) -> None:
         if self._pinned_fp is not None and fp != self._pinned_fp:
@@ -318,6 +355,56 @@ class DataHandler(Component):
         raise wire.WireFormatError(
             f"{self.name}: unexpected wire kind {msg.kind} in params sync")
 
+    def _remember_stream(self, tag: bytes, stream) -> None:
+        """Insert with a hard cap of two entries (current xi + the round it
+        came from): at any round the only reusable streams are xi(t) — this
+        round's, becoming next round's xp — and a prefetched xi(t+1)."""
+        cache = self._stream_cache
+        cache[tag] = stream
+        while len(cache) > 2:
+            cache.pop(next(iter(cache)))
+
+    def _round_streams(self, pipe: DPPipeline, keys: BarrierKeys,
+                       state: NoiseState, use_prev: bool):
+        """Draw (or recall) this round's xi / xp streams through the shared
+        :meth:`DPPipeline.noise_stream` jit. Serial and speculative modes
+        both call this — the ONLY difference is whether the cache is
+        consulted, and a hit returns the very array the same jit produced
+        earlier, so the two modes are bitwise indistinguishable."""
+        xi_tag = np.asarray(keys.key_xi).tobytes()
+        xi = self._stream_cache.get(xi_tag) if self.speculative else None
+        if xi is None or xi.shape[0] != pipe.layout.total:
+            xi = pipe.noise_stream(keys.key_xi, self.silo_idx)
+        else:
+            self._spec_hits += 1
+        if self.speculative:
+            self._remember_stream(xi_tag, xi)
+        xp = None
+        if use_prev:
+            xp_tag = np.asarray(state.prev_key).tobytes()
+            xp = self._stream_cache.get(xp_tag) if self.speculative else None
+            if xp is None or xp.shape[0] != pipe.layout.total:
+                xp = pipe.noise_stream(state.prev_key, self.silo_idx)
+            else:
+                self._spec_hits += 1
+        return xi, xp
+
+    def prefetch_round(self, keys: BarrierKeys) -> None:
+        """Speculatively draw round-(t+1)'s xi stream while round t's
+        aggregation/broadcast tail is still in flight (the driver calls this
+        between submitting finish_round and collecting it). Safe against
+        every failure mode by the cache-tag construction: a membership
+        change does not invalidate xi (the stream is a function of key and
+        silo only — participation gates ride in the scales), and any resync
+        or reschedule that lands a different key simply misses the cache."""
+        if not self.speculative or self._spec_pipe is None:
+            return
+        tag = np.asarray(keys.key_xi).tobytes()
+        if tag not in self._stream_cache:
+            self._remember_stream(
+                tag, self._spec_pipe.noise_stream(keys.key_xi,
+                                                  self.silo_idx))
+
     def _masked_contrib(self, pipe: DPPipeline, grads, active,
                         keys: BarrierKeys, state: NoiseState, clip_bound,
                         admin_row=None):
@@ -327,16 +414,29 @@ class DataHandler(Component):
         per-round protocol cost is the codec + channel crypto, not hundreds
         of eager op dispatches or n XLA compiles. The admin-mask and perleaf
         constructions keep the eager path — they rely on concrete
-        participation sets (single-row reconstruction / full-ring guard)."""
+        participation sets (single-row reconstruction / full-ring guard).
+
+        On the packed pairwise path the xi/xp noise streams enter as
+        ARGUMENTS (``_round_streams``) rather than being drawn in-graph, so
+        the speculative scheduler can reuse round-t's xi as round-(t+1)'s
+        xp without any cross-graph bitwise exposure."""
         if pipe.priv.mask_mode == "admin" or pipe.policy.mode != "packed":
             norm = pipe.norm_tree(grads)
             scale = pipe.clip_scale(norm, clip_bound)
             return pipe.silo_contribution(grads, self.silo_idx, scale,
                                           active, keys, state, clip_bound,
                                           admin_row=admin_row), norm
-        fn = _shared_pipe_fn(pipe, state.prev_active is not None)
-        return fn(grads, jnp.asarray(self.silo_idx, jnp.int32), active,
-                  keys, state, jnp.asarray(clip_bound, jnp.float32))
+        has_prev = state.prev_active is not None
+        if pipe.priv.mask_mode != "pairwise":
+            fn = _shared_pipe_fn(pipe, has_prev)
+            return fn(grads, jnp.asarray(self.silo_idx, jnp.int32), active,
+                      keys, state, jnp.asarray(clip_bound, jnp.float32))
+        use_prev = pipe.priv.noise_lambda > 0.0
+        xi, xp = self._round_streams(pipe, keys, state, use_prev)
+        fn = _shared_pipe_fn(pipe, has_prev, "xi+xp" if use_prev else "xi")
+        args = (grads, jnp.asarray(self.silo_idx, jnp.int32), active, keys,
+                state, jnp.asarray(clip_bound, jnp.float32), xi)
+        return fn(*args, xp) if use_prev else fn(*args)
 
     def compute_update(self, params_blob: bytes, grad_fn: Callable,
                        priv: PrivacyConfig, keys: BarrierKeys, n_silos: int,
@@ -367,6 +467,10 @@ class DataHandler(Component):
         # untrusted model-owner code inside the sandbox (R1/R2)
         loss, grads = self.sandbox.run(grad_fn, params, self.data)
         pipe = DPPipeline(priv, flatbuf.layout_of(grads), n_silos)
+        if priv.mask_mode == "pairwise" and pipe.policy.mode == "packed":
+            # remembered for prefetch_round: next round's stream needs this
+            # round's layout/engine config (which the driver doesn't hold)
+            self._spec_pipe = pipe
         active = pipe.full_active() if active is None \
             else jnp.asarray(active, jnp.bool_)
         state = noise_state if noise_state is not None \

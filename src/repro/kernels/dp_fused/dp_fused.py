@@ -16,6 +16,14 @@ Two kernel families over buffers produced by ``core/flatbuf.py``:
   indices), so masks and noise never touch HBM — one read + one write of the
   gradient for the whole barrier.
 
+* ``noise_batch_pallas``: (P,) -> (P,)  ONE launch generating ALL n per-silo
+  corrected-noise streams (xi_t share + lambda-corrected xi_{t-1} share,
+  per-silo sigma_c/sqrt(k) scales and gates from SMEM vectors) and folding
+  them onto the aggregate in silo order inside VMEM — replacing the n
+  separate ``clip_mask_pallas(zeros, ...)`` launches of the engine's
+  ``corrected_noise`` stage. The fold is the same sequential left fold, so
+  the result is bit-identical to the sum-of-streams construction.
+
 Scalars ride in SMEM. Counters are global element indices, so results are
 independent of the blocking and bit-identical to the jnp oracles in
 ``ref.py`` for any block size.
@@ -204,4 +212,77 @@ def clip_mask_pallas(g, scale, key_r, key_xi, prev_key, silo, n_silos: int,
         out_shape=jax.ShapeDtypeStruct((1, P), jnp.float32),
         interpret=interpret,
     )(ints, flts, g[None])
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# noise_batch: all n per-silo corrected-noise streams, one launch
+
+
+def _noise_batch_kernel(ints_ref, flts_ref, scales_ref, lams_ref, g_ref,
+                        o_ref, *, block_d: int, n_silos: int, use_prev: bool):
+    di = pl.program_id(0)
+    key_x0 = ints_ref[0].astype(jnp.uint32)
+    key_x1 = ints_ref[1].astype(jnp.uint32)
+    key_p0 = ints_ref[2].astype(jnp.uint32)
+    key_p1 = ints_ref[3].astype(jnp.uint32)
+    s_prev = flts_ref[0]  # std of every silo's step-(t-1) share
+
+    base = jnp.asarray(di * block_d).astype(jnp.uint32)
+    idx = base + jax.lax.broadcasted_iota(jnp.uint32, (1, block_d), 1)
+
+    def stream(k0, k1, sid):
+        z0, _ = normal_pair(k0, k1, idx,
+                            sid.astype(jnp.uint32) + jnp.zeros_like(idx))
+        return z0
+
+    def add_share(i, out):
+        # each share is built exactly as the per-silo clip_mask launch did
+        # on a zeros buffer — (0 + s_i*xi_i) - lam_i*(s_prev*xp_i) — then
+        # folded on in silo order: the left fold every tier bit-matches
+        share = 0.0 + scales_ref[i] * stream(key_x0, key_x1, i)
+        if use_prev:
+            share = share - lams_ref[i] * (s_prev * stream(key_p0, key_p1, i))
+        return out + share
+
+    out = g_ref[...].astype(jnp.float32)
+    out = jax.lax.fori_loop(0, n_silos, add_share, out)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("use_prev", "block_d",
+                                             "interpret"))
+def noise_batch_pallas(g_sum, key_xi, prev_key, noise_scales, lam_gates,
+                       prev_noise_scale, use_prev: bool = True,
+                       block_d: int = 1024, interpret: bool = True):
+    """g_sum: packed (P,) aggregate; key_xi/prev_key: (2,) uint32;
+    noise_scales/lam_gates: per-silo (n,) fp32 (participation gates folded
+    in by the caller). Returns fp32
+    ``g_sum + sum_i (s_i*xi_t^i - lam_i*s_prev*xi_{t-1}^i)`` with every
+    stream regenerated inside VMEM — one launch for all n silos."""
+    P = g_sum.shape[0]
+    n_silos = noise_scales.shape[0]
+    block_d = min(block_d, P)
+    assert P % block_d == 0, (P, block_d)
+    ints = jnp.stack([
+        key_xi[0].astype(jnp.int32), key_xi[1].astype(jnp.int32),
+        prev_key[0].astype(jnp.int32), prev_key[1].astype(jnp.int32)])
+    flts = jnp.asarray(prev_noise_scale, jnp.float32)[None]
+
+    out = pl.pallas_call(
+        functools.partial(_noise_batch_kernel, block_d=block_d,
+                          n_silos=n_silos, use_prev=use_prev),
+        grid=(P // block_d,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block_d), lambda d: (0, d)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda d: (0, d)),
+        out_shape=jax.ShapeDtypeStruct((1, P), jnp.float32),
+        interpret=interpret,
+    )(ints, flts, noise_scales.astype(jnp.float32),
+      lam_gates.astype(jnp.float32), g_sum[None])
     return out[0]

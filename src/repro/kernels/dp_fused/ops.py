@@ -10,10 +10,13 @@ import jax.numpy as jnp
 from repro.core import flatbuf
 from repro.kernels.dispatch import kernel_variant, on_tpu, REGISTRY
 from repro.kernels.dp_fused import ref
-from repro.kernels.dp_fused.dp_fused import clip_mask_pallas, clip_sum_pallas
+from repro.kernels.dp_fused.dp_fused import (clip_mask_pallas,
+                                             clip_sum_pallas,
+                                             noise_batch_pallas)
 
 CLIP_SUM = "dp_fused_clip_sum"
 CLIP_MASK = "dp_fused_clip_mask"
+NOISE_BATCH = "dp_fused_noise_batch"
 
 def tree_ctx(tree):
     return {"n_leaves": len(jax.tree.leaves(tree))}
@@ -54,7 +57,18 @@ def _clip_sum_jnp(g, clip_bound):
 def _clip_mask_pallas(g, scale, key_r, key_xi, prev_key, silo, n_silos,
                       sigma_c, b_scale, lam_gate, use_pairwise=True,
                       use_prev=True, nxt=None, noise_scale=None,
-                      prev_noise_scale=None):
+                      prev_noise_scale=None, xi=None, xp=None):
+    if xi is not None or xp is not None:
+        # externally drawn streams are a host-protocol feature (the wire
+        # tier's speculative rounds); the TPU kernel regenerates streams in
+        # VMEM precisely because that beats hauling them through HBM, so
+        # injected streams route through the jnp reference instead
+        return ref.clip_mask_ref(g, scale, key_r, key_xi, prev_key, silo,
+                                 n_silos, sigma_c, b_scale, lam_gate,
+                                 use_pairwise=use_pairwise, use_prev=use_prev,
+                                 nxt=nxt, noise_scale=noise_scale,
+                                 prev_noise_scale=prev_noise_scale,
+                                 xi=xi, xp=xp)
     return clip_mask_pallas(g, scale, key_r, key_xi, prev_key, silo, n_silos,
                             sigma_c, b_scale, lam_gate,
                             use_pairwise=use_pairwise, use_prev=use_prev,
@@ -67,12 +81,34 @@ def _clip_mask_pallas(g, scale, key_r, key_xi, prev_key, silo, n_silos,
                 doc="jnp reference (bit-identical streams)")
 def _clip_mask_jnp(g, scale, key_r, key_xi, prev_key, silo, n_silos, sigma_c,
                    b_scale, lam_gate, use_pairwise=True, use_prev=True,
-                   nxt=None, noise_scale=None, prev_noise_scale=None):
+                   nxt=None, noise_scale=None, prev_noise_scale=None,
+                   xi=None, xp=None):
     return ref.clip_mask_ref(g, scale, key_r, key_xi, prev_key, silo, n_silos,
                              sigma_c, b_scale, lam_gate,
                              use_pairwise=use_pairwise, use_prev=use_prev,
                              nxt=nxt, noise_scale=noise_scale,
-                             prev_noise_scale=prev_noise_scale)
+                             prev_noise_scale=prev_noise_scale,
+                             xi=xi, xp=xp)
+
+
+@kernel_variant(NOISE_BATCH, "pallas", priority=100,
+                predicate=lambda ctx: _divisible(ctx["P"], 1024),
+                auto_predicate=lambda ctx: ctx["on_tpu"],
+                doc="all n corrected-noise streams in one VMEM launch")
+def _noise_batch_pallas(g_sum, key_xi, prev_key, noise_scales, lam_gates,
+                        prev_noise_scale, use_prev=True):
+    return noise_batch_pallas(g_sum, key_xi, prev_key, noise_scales,
+                              lam_gates, prev_noise_scale,
+                              use_prev=use_prev, interpret=not on_tpu())
+
+
+@kernel_variant(NOISE_BATCH, "jnp", priority=10,
+                doc="jnp reference (bit-identical batched streams)")
+def _noise_batch_jnp(g_sum, key_xi, prev_key, noise_scales, lam_gates,
+                     prev_noise_scale, use_prev=True):
+    return ref.noise_batch_ref(g_sum, key_xi, prev_key, noise_scales,
+                               lam_gates, prev_noise_scale,
+                               use_prev=use_prev)
 
 
 def clip_sum_packed(g, clip_bound, impl: str = "auto"):
@@ -84,15 +120,32 @@ def clip_sum_packed(g, clip_bound, impl: str = "auto"):
 def clip_mask_packed(g, scale, key_r, key_xi, prev_key, silo, n_silos: int,
                      sigma_c, b_scale, lam_gate, use_pairwise: bool = True,
                      use_prev: bool = True, impl: str = "auto", nxt=None,
-                     noise_scale=None, prev_noise_scale=None):
+                     noise_scale=None, prev_noise_scale=None, xi=None,
+                     xp=None):
     """g: packed (P,) -> fp32 clipped+masked+corrected buffer (see ref).
     ``nxt``/``noise_scale``/``prev_noise_scale`` are the elastic-membership
-    overrides (ring neighbour + per-stream stds for the active counts)."""
+    overrides (ring neighbour + per-stream stds for the active counts);
+    ``xi``/``xp`` inject externally drawn noise streams (speculative wire
+    rounds — see ref.clip_mask_ref)."""
     return REGISTRY.dispatch(
         CLIP_MASK, impl, {"P": g.shape[-1]},
         g, scale, key_r, key_xi, prev_key, silo, n_silos, sigma_c, b_scale,
         lam_gate, use_pairwise=use_pairwise, use_prev=use_prev, nxt=nxt,
-        noise_scale=noise_scale, prev_noise_scale=prev_noise_scale)
+        noise_scale=noise_scale, prev_noise_scale=prev_noise_scale,
+        xi=xi, xp=xp)
+
+
+def noise_batch_packed(g_sum, key_xi, prev_key, noise_scales, lam_gates,
+                       prev_noise_scale, use_prev: bool = True,
+                       impl: str = "auto"):
+    """g_sum: packed (P,) aggregate -> fp32 aggregate + all n per-silo
+    corrected-noise shares, one dispatch (see ref.noise_batch_ref).
+    ``noise_scales``/``lam_gates`` are per-silo (n,) vectors with the
+    caller's participation gates folded in."""
+    return REGISTRY.dispatch(
+        NOISE_BATCH, impl, {"P": g_sum.shape[-1]},
+        g_sum, key_xi, prev_key, noise_scales, lam_gates, prev_noise_scale,
+        use_prev=use_prev)
 
 
 # ---------------------------------------------------------------------------

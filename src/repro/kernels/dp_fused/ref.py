@@ -8,6 +8,7 @@ barrier sync, corrected fused noise) draws from one consistent stream family.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.zsmask.threefry import normal_pair
@@ -35,7 +36,7 @@ def clip_sum_ref(g, clip_bound):
 def clip_mask_ref(g, scale, key_r, key_xi, prev_key, silo, n_silos, sigma_c,
                   b_scale, lam_gate, use_pairwise: bool = True,
                   use_prev: bool = True, *, nxt=None, noise_scale=None,
-                  prev_noise_scale=None):
+                  prev_noise_scale=None, xi=None, xp=None):
     """g: packed (P,) buffer. Returns fp32
     ``g*scale + b*(r_i - r_nxt) + s*xi_t - lam_gate*s_prev*xi_prev``.
 
@@ -45,7 +46,13 @@ def clip_mask_ref(g, scale, key_r, key_xi, prev_key, silo, n_silos, sigma_c,
     (core/dp_pipeline) overrides them: ``nxt`` is the next *active* silo in
     the ring (so the r-terms still telescope over any participation set) and
     ``noise_scale``/``prev_noise_scale`` carry sigma_c/sqrt(k) for the actual
-    contributing counts at steps t and t-1 (both may be traced scalars)."""
+    contributing counts at steps t and t-1 (both may be traced scalars).
+
+    ``xi``/``xp``: externally drawn noise / prev-noise streams (the wire
+    tier's speculative rounds draw them through one shared standalone jit so
+    a cached stream and a recomputed one are the same compiled function's
+    output — see ``DPPipeline.noise_stream``). ``None`` keeps the in-graph
+    draw; the combine sequence is identical either way."""
     P = g.shape[0]
     idx = jnp.arange(P, dtype=jnp.uint32)
     if noise_scale is None:
@@ -60,8 +67,65 @@ def clip_mask_ref(g, scale, key_r, key_xi, prev_key, silo, n_silos, sigma_c,
         r_i = _stream(key_r, idx, silo)
         r_next = _stream(key_r, idx, nxt)
         out = out + jnp.asarray(b_scale, jnp.float32) * (r_i - r_next)
-    out = out + s * _stream(key_xi, idx, silo)
+    out = out + s * (_stream(key_xi, idx, silo) if xi is None else xi)
     if use_prev:
-        xp = _stream(prev_key, idx, silo)
+        if xp is None:
+            xp = _stream(prev_key, idx, silo)
         out = out - jnp.asarray(lam_gate, jnp.float32) * (s_prev * xp)
+    return out
+
+
+def noise_batch_ref(g_sum, key_xi, prev_key, noise_scales, lam_gates,
+                    prev_noise_scale, use_prev: bool = True, chunk: int = 8):
+    """All n per-silo corrected-noise shares in batched draws, summed onto a
+    packed ``(P,)`` aggregate.
+
+    Bit-identical to the sum-of-streams construction it replaces — the
+    sequential left fold of per-silo ``clip_mask_ref(zeros, 1.0, ...)``
+    shares onto ``g_sum`` — because (a) threefry2x32/Box-Muller are
+    elementwise, so a ``(m, P)`` counter grid with silo ids down the rows
+    yields rows bitwise-equal to per-silo ``(P,)`` draws, (b) each share is
+    built exactly as before, ``(0 + s_i*xi_i) - lam_i*(s_prev*xp_i)``, and
+    (c) the shares are folded onto the aggregate one silo at a time in silo
+    order (the fp association every tier agrees on).
+
+    ``noise_scales``/``lam_gates``: per-silo ``(n,)`` fp32 vectors — the
+    caller folds its participation gates in (dropped silos carry 0.0).
+    Silos are drawn ``chunk`` at a time so peak memory stays O(chunk * P)
+    at any n. The chunk loop is deliberately UNROLLED, never a
+    ``fori_loop``: XLA compiles a loop body as one fused graph and
+    contracts the share multiply-adds into FMAs, which breaks the bitwise
+    contract against the eager per-silo fold (measured: ~2/3 of elements
+    off by 1 ulp at n=44). Trace size is O(n/chunk) — 50 chunk calls at
+    the 400-silo scale-out, well within trace budget.
+    """
+    P = g_sum.shape[0]
+    n = noise_scales.shape[0]
+    idx = jnp.arange(P, dtype=jnp.uint32)
+    s_prev = jnp.asarray(prev_noise_scale, jnp.float32)
+    out = g_sum.astype(jnp.float32)
+
+    def fold_chunk(lo, m, out):
+        """Draw silos [lo, lo+m) as one (m, P) batch, fold in silo order."""
+        sid = lo.astype(jnp.uint32) if hasattr(lo, "astype") \
+            else jnp.uint32(lo)
+        c0 = jnp.broadcast_to(idx[None], (m, P))
+        c1 = jnp.broadcast_to(
+            (sid + jnp.arange(m, dtype=jnp.uint32))[:, None], (m, P))
+        xi, _ = normal_pair(key_xi[0], key_xi[1], c0, c1)
+        s_col = jax.lax.dynamic_slice(noise_scales, (lo,), (m,))[:, None]
+        shares = jnp.float32(0.0) + s_col * xi
+        if use_prev:
+            xp, _ = normal_pair(prev_key[0], prev_key[1], c0, c1)
+            l_col = jax.lax.dynamic_slice(lam_gates, (lo,), (m,))[:, None]
+            shares = shares - l_col * (s_prev * xp)
+        for i in range(m):
+            out = out + shares[i]
+        return out
+
+    full, rem = divmod(n, chunk)
+    for c in range(full):
+        out = fold_chunk(c * chunk, chunk, out)
+    if rem:
+        out = fold_chunk(full * chunk, rem, out)
     return out

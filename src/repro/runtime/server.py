@@ -35,6 +35,9 @@ class Request:
     done: bool = False
     submit_step: int = 0   # scheduler clock at submission
     finish_step: int = -1  # scheduler clock when the last token landed
+    # admission-control identity (the data owner / API key the request
+    # arrived under); None = untenanted, exempt from per-tenant slot caps
+    tenant: Optional[str] = None
 
 
 @dataclass

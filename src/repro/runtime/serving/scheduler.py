@@ -62,7 +62,8 @@ class ContinuousServer:
     def __init__(self, model, params, *, max_batch: int = 8,
                  max_len: int = 512, page_size: int = 16,
                  prefill_chunk: int = 16, n_pages: Optional[int] = None,
-                 trace_logits: bool = False):
+                 trace_logits: bool = False,
+                 max_slots_per_tenant: Optional[int] = None):
         self.model = model
         self.params = params
         self.n_slots = max_batch
@@ -73,6 +74,11 @@ class ContinuousServer:
                              n_pages=n_pages or max_batch * per_slot,
                              page_size=page_size, pages_per_slot=per_slot)
         self.slots: list[Optional[_Slot]] = [None] * max_batch
+        # per-tenant admission cap: one tenant's burst cannot monopolize the
+        # batch (and with it the page pool) — the confidential-serving
+        # analogue of the training tier's per-silo budget isolation.
+        # Requests with tenant=None are exempt (single-operator use)
+        self.max_slots_per_tenant = max_slots_per_tenant
         self.queue: collections.deque[Request] = collections.deque()
         self.stats = ServerStats()
         self.clock = 0  # scheduler steps; the latency currency
@@ -92,18 +98,32 @@ class ContinuousServer:
         self.queue.append(req)
 
     # ------------------------------------------------------------- lifecycle
+    def _tenant_slots(self, tenant: str) -> int:
+        return sum(1 for s in self.slots
+                   if s is not None and s.req.tenant == tenant)
+
+    def _tenant_ok(self, req: Request) -> bool:
+        return (self.max_slots_per_tenant is None or req.tenant is None
+                or self._tenant_slots(req.tenant) < self.max_slots_per_tenant)
+
     def _admit(self) -> None:
         for i in range(self.n_slots):
             if not self.queue:
                 return
             if self.slots[i] is not None:
                 continue
-            req = self.queue[0]
+            # first queued request whose tenant is under its slot cap: a
+            # capped tenant waits, but must not head-of-line-block the other
+            # tenants (admission stays FIFO *within* each tenant — the scan
+            # takes the earliest admissible request)
+            req = next((r for r in self.queue if self._tenant_ok(r)), None)
+            if req is None:
+                return
             need = _bucket_pages(len(req.prompt) + req.max_new_tokens,
                                  self.pool.page_size, self.pool.tables.shape[1])
             if not self.pool.alloc(i, need):
                 return  # pool pressure: retry next step, keep FIFO order
-            self.queue.popleft()
+            self.queue.remove(req)
             self.slots[i] = _Slot(req)
 
     def _finish(self, i: int, req: Request) -> None:

@@ -99,3 +99,41 @@ def test_dus_counts_slice_not_buffer():
     # defensive full-buffer copy (1x buffer) — naive result+operand
     # accounting would be >= 2x buffer
     assert s.hbm_bytes < 1.7 * (100 * 64 * 4)
+
+
+def test_wire_cost_split_recovers_linear_model():
+    """The fixed/per-silo split must recover a synthetic intercept+slope
+    exactly (up to fp), stay accurate at small n despite the orders-of-
+    magnitude spread (relative weighting), and reject a single-row sweep."""
+    import pytest
+
+    from repro.analysis.report import wire_bench_table, wire_cost_split
+
+    def row(n, us):
+        return {"n_silos": n, "us_per_round": us, "per_silo_us": us / n,
+                "payload_floats": 65536}
+
+    results = {f"wire/sweep_n{n}_p64k": row(n, 1500.0 + 620.0 * n)
+               for n in (4, 32, 128, 400)}
+    split = wire_cost_split(results)
+    assert abs(split["intercept_us"] - 1500.0) < 1e-6
+    assert abs(split["slope_us_per_silo"] - 620.0) < 1e-9
+    assert split["max_resid_frac"] < 1e-9
+
+    with pytest.raises(ValueError, match=">= 2"):
+        wire_cost_split({"wire/sweep_n4_p64k": row(4, 4000.0)})
+
+    # table rendering: speculative column + ratio when the rows exist
+    results["wire/round_packed_pipelined_p64k"] = {
+        "us_per_round": 200.0, "payload_floats": 65536}
+    results["wire/round_packed_speculative_p64k"] = {
+        "us_per_round": 100.0, "payload_floats": 65536}
+    results["wire/round_packed_serial_p64k"] = {
+        "us_per_round": 210.0, "payload_floats": 65536}
+    import json
+    import tempfile
+    with tempfile.NamedTemporaryFile("w", suffix=".json",
+                                     delete=False) as f:
+        json.dump(results, f)
+    table = wire_bench_table(f.name)
+    assert "2.00x" in table and "cost split" in table

@@ -135,6 +135,7 @@ EXPECTED_IMPLS = {
     "dp_clip_tree": {"packed", "perleaf", "pallas", "jnp"},
     "dp_fused_clip_sum": {"pallas", "jnp"},
     "dp_fused_clip_mask": {"pallas", "jnp"},
+    "dp_fused_noise_batch": {"pallas", "jnp"},
     "dp_noise_tree": {"packed", "perleaf", "pallas", "jnp"},
     "flash_attention": {"pallas", "blocked", "blocked_naive", "jnp"},
     "mamba2_ssd": {"pallas", "jnp", "sequential"},

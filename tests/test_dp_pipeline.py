@@ -161,6 +161,40 @@ def test_noise_construction_bit_identical_across_tiers():
     np.testing.assert_array_equal(np.asarray(total), np.asarray(fused_noise))
 
 
+def test_noise_construction_bit_identical_many_silos():
+    """The same wire-vs-central bitwise contract at the many-silo scale
+    (n=44 exercises the batched kernel's chunked fold), with distinct
+    participation sets at t and t-1."""
+    import dataclasses
+
+    n = 44
+    priv = PrivacyConfig(enabled=True, sigma=0.5, clip_bound=1.0,
+                         clip_mode="per_silo", noise_lambda=0.7, n_silos=n,
+                         silo_mode="vmap")
+    priv = dataclasses.replace(priv, mask_scale=0.0)
+    t = {"w": jnp.zeros((2048,), jnp.float32)}
+    layout = flatbuf.layout_of(t)
+    pipe = DPPipeline(priv, layout, n)
+    keys = barrier_mod.step_keys(jax.random.PRNGKey(5),
+                                 jnp.zeros((), jnp.int32))
+    act = np.ones(n, bool)
+    act[3::7] = False
+    prev = np.ones(n, bool)
+    prev[5::9] = False
+    ns = NoiseState(prev_key=jnp.array([7, 8], jnp.uint32),
+                    has_prev=jnp.ones((), jnp.bool_),
+                    prev_active=jnp.asarray(prev))
+    active = jnp.asarray(act)
+    fused_noise = pipe.corrected_noise_packed(
+        jnp.zeros((layout.total,), jnp.float32), keys, ns, 1.0, active)
+    zeros = jax.tree.map(jnp.zeros_like, t)
+    total = None
+    for i in range(n):
+        c = pipe.silo_contribution(zeros, i, 1.0, active, keys, ns, 1.0)
+        total = c if total is None else total + c
+    np.testing.assert_array_equal(np.asarray(total), np.asarray(fused_noise))
+
+
 def test_parity_with_dynamic_clipping_and_correction():
     """Two steps with lambda-correction: fused and wire agree including the
     regenerated -lam*xi_{t-1} term."""

@@ -133,6 +133,68 @@ def test_clip_mask_kernel_bit_consistent_any_blocking():
                                    atol=1e-5)
 
 
+def _noise_batch_case(n):
+    """Per-silo scale/gate vectors with a few dropped silos."""
+    gates = np.ones(n, np.float32)
+    gates[1::5] = 0.0
+    noise_scales = jnp.asarray((0.3 + 0.01 * np.arange(n)) * gates,
+                               jnp.float32)
+    lam_gates = jnp.asarray(0.7 * gates, jnp.float32)
+    return noise_scales, lam_gates, jnp.float32(0.41)
+
+
+@pytest.mark.parametrize("n", [4, 11, 44])
+def test_noise_batch_ref_bit_matches_silo_fold(n):
+    """The one-launch batched construction == the sequential left fold of
+    per-silo clip_mask_ref noise shares, BIT-IDENTICAL at every n (including
+    partial participation gates and the chunked >8-silo path — the chunk
+    loop must stay unrolled or XLA's loop-body FMA contraction breaks
+    this)."""
+    P = 2048
+    g = jax.random.normal(jax.random.PRNGKey(1), (P,))
+    zeros = jnp.zeros((P,), jnp.float32)
+    noise_scales, lam_gates, s_prev = _noise_batch_case(n)
+    expect = g.astype(jnp.float32)
+    for i in range(n):
+        expect = expect + fref.clip_mask_ref(
+            zeros, 1.0, KEY_XI, KEY_XI, KEY_P, jnp.int32(i), n, 1.0, 0.0,
+            lam_gates[i], use_pairwise=False, use_prev=True,
+            noise_scale=noise_scales[i], prev_noise_scale=s_prev)
+    got = fref.noise_batch_ref(g, KEY_XI, KEY_P, noise_scales, lam_gates,
+                               s_prev)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+    # lam = 0 everywhere: the prev-stream draw may be skipped entirely
+    no_prev = fref.noise_batch_ref(g, KEY_XI, KEY_P, noise_scales,
+                                   jnp.zeros((n,), jnp.float32), s_prev,
+                                   use_prev=False)
+    expect_np = g.astype(jnp.float32)
+    for i in range(n):
+        expect_np = expect_np + fref.clip_mask_ref(
+            zeros, 1.0, KEY_XI, KEY_XI, KEY_P, jnp.int32(i), n, 1.0, 0.0,
+            0.0, use_pairwise=False, use_prev=False,
+            noise_scale=noise_scales[i], prev_noise_scale=s_prev)
+    np.testing.assert_array_equal(np.asarray(no_prev), np.asarray(expect_np))
+
+
+@pytest.mark.parametrize("n", [4, 44])
+def test_noise_batch_pallas_matches_ref_any_blocking(n):
+    """Single-launch Pallas variant against the jnp oracle for several
+    blockings (same 1e-5 tolerance as the other fused kernels: the jitted
+    kernel graph may FMA-contract the share multiply-adds)."""
+    from repro.kernels.dp_fused.dp_fused import noise_batch_pallas
+
+    P = 4096
+    g = jax.random.normal(jax.random.PRNGKey(2), (P,))
+    noise_scales, lam_gates, s_prev = _noise_batch_case(n)
+    ref_out = fref.noise_batch_ref(g, KEY_XI, KEY_P, noise_scales, lam_gates,
+                                   s_prev)
+    for block in (1024, 2048, 4096):
+        pal = noise_batch_pallas(g, KEY_XI, KEY_P, noise_scales, lam_gates,
+                                 s_prev, block_d=block, interpret=True)
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref_out),
+                                   atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # masked aggregates under fixed keys
 

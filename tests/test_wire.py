@@ -169,7 +169,7 @@ def test_fast_keystream_deterministic_and_nonce_separated():
 
 
 def _session_fixture(codec="packed", n=4, sigma=0.05, budgets=None,
-                     mask_mode="pairwise", **kw):
+                     mask_mode="pairwise", noise_lambda=0.0, **kw):
     from repro.api import CollaborativeSession
     from repro.configs.paper_models import MNIST_MLP3
     from repro.data.synthetic import synthetic_mnist
@@ -182,7 +182,7 @@ def _session_fixture(codec="packed", n=4, sigma=0.05, budgets=None,
         [{"x": jnp.asarray(s.x), "y": jnp.asarray(s.y)}
          for s in train.split(n)],
         PrivacyConfig(enabled=True, sigma=sigma, clip_bound=1.0,
-                      mask_mode=mask_mode),
+                      mask_mode=mask_mode, noise_lambda=noise_lambda),
         codec=codec, params_template=params, silo_budgets=budgets, **kw)
 
     def grad_fn(p, data):
@@ -283,6 +283,113 @@ def test_pipelined_run_matches_serial_bit_exact():
     assert losses_a == losses_b
     assert sess_b.wire_stats["rounds"] == 4
     assert sess_a.wire_stats == sess_b.wire_stats
+
+
+def test_speculative_run_matches_serial_bit_exact():
+    """Speculative rounds reuse round t's xi as round t+1's correction
+    stream and prefetch round t+1's xi during round t's broadcast tail —
+    the params, losses AND wire stats must be bitwise indistinguishable
+    from the serial step() loop, with the cache actually getting hits
+    (otherwise this test passes vacuously as plain pipelined)."""
+    sess_a, params, grad_fn, update_fn = _session_fixture(noise_lambda=0.7)
+    pa = params
+    losses_a = []
+    for t in range(4):
+        pa, l = sess_a.step(t, pa, grad_fn, update_fn, lr=0.5)
+        losses_a.append(l)
+    sess_b, _, _, _ = _session_fixture(noise_lambda=0.7)
+    pb, losses_b = sess_b.run(params, grad_fn, update_fn, lr=0.5,
+                              n_rounds=4, speculative=True)
+    tree_eq(pa, pb)
+    assert losses_a == losses_b
+    assert sess_a.wire_stats == sess_b.wire_stats
+    hits = [h._spec_hits for h in sess_b.handlers]
+    assert all(h > 0 for h in hits), hits
+    # run() scopes the speculative flag: handlers are back to serial mode
+    assert not any(h.speculative for h in sess_b.handlers)
+
+
+def test_speculative_membership_change_matches_serial():
+    """A drop + rejoin between speculative runs invalidates nothing it
+    shouldn't: the surviving handlers' caches stay valid (streams are a
+    function of key and silo, not the active set), the rejoined handler's
+    stale cache misses on its key tags and falls back to inline draws, and
+    the broken delta chain takes the PR 5 StaleParamsError -> full resync
+    path. End state must bit-match the serial schedule."""
+    sched = [("run", 2), ("drop", 1), ("run", 2), ("rejoin", 1), ("run", 2)]
+
+    def drive(speculative):
+        sess, params, grad_fn, update_fn = _session_fixture(
+            noise_lambda=0.7)
+        p, losses = params, []
+        for op, arg in sched:
+            if op == "drop":
+                assert sess.drop_silo(arg)
+            elif op == "rejoin":
+                sess.rejoin_silo(arg)
+            elif speculative:
+                p, ls = sess.run(p, grad_fn, update_fn, lr=0.5,
+                                 n_rounds=arg, speculative=True)
+                losses += ls
+            else:
+                for _ in range(arg):
+                    p, l = sess.step(sess._next_round, p, grad_fn,
+                                     update_fn, lr=0.5)
+                    losses.append(l)
+        return sess, p, losses
+
+    sess_a, pa, losses_a = drive(False)
+    sess_b, pb, losses_b = drive(True)
+    tree_eq(pa, pb)
+    assert losses_a == losses_b
+    assert sess_a.wire_stats == sess_b.wire_stats
+    assert sess_a.wire_stats["resync_bytes"] > 0  # the chain really broke
+    assert sess_a.accountant.contributions == sess_b.accountant.contributions
+    assert any(h._spec_hits > 0 for h in sess_b.handlers)
+
+
+def test_speculative_broken_delta_chain_matches_serial():
+    """A handler whose delta chain breaks mid-schedule (missed epoch)
+    raises StaleParamsError and is resynced with a full blob inside the
+    round — under the speculative scheduler exactly as under serial, with
+    bit-identical results."""
+    def drive(speculative):
+        sess, params, grad_fn, update_fn = _session_fixture(
+            noise_lambda=0.7)
+        p, losses = params, []
+        for phase in range(2):
+            if phase == 1:
+                # simulate a missed broadcast: next delta won't chain
+                sess.handlers[2]._params_epoch -= 1
+            if speculative:
+                p, ls = sess.run(p, grad_fn, update_fn, lr=0.5,
+                                 n_rounds=2, speculative=True)
+                losses += ls
+            else:
+                for _ in range(2):
+                    p, l = sess.step(sess._next_round, p, grad_fn,
+                                     update_fn, lr=0.5)
+                    losses.append(l)
+        return sess, p, losses
+
+    sess_a, pa, losses_a = drive(False)
+    sess_b, pb, losses_b = drive(True)
+    assert sess_a.wire_stats["resync_bytes"] > 0
+    tree_eq(pa, pb)
+    assert losses_a == losses_b
+    assert sess_a.wire_stats == sess_b.wire_stats
+
+
+def test_wire_bench_sweep_ns_rejects_degenerate_counts():
+    import importlib
+    wb = importlib.import_module("benchmarks.wire_bench")
+    assert wb.parse_sweep_ns("4,32") == (4, 32)
+    with pytest.raises(SystemExit, match=">= 2"):
+        wb.parse_sweep_ns("1")
+    with pytest.raises(SystemExit, match=">= 2"):
+        wb.parse_sweep_ns("4,0,32")
+    with pytest.raises(SystemExit, match="integers"):
+        wb.parse_sweep_ns("4,abc")
 
 
 def test_pickle_codec_still_works_end_to_end():
