@@ -1,7 +1,8 @@
 """Serving benchmark: continuous batching (paged, slot-recycled KV cache)
-vs the wave baseline on a Zipf-distributed prompt-length workload.
+vs the wave baseline on a Zipf-distributed prompt-length workload, plus the
+prefix-sharing and speculative-decoding layers on a shared-prefix workload.
 
-Both schedulers serve byte-identical copies of the same request list with
+All schedulers serve byte-identical copies of the same request list with
 the same weights, greedy argmax — they produce the same tokens (a test
 invariant), so every difference below is pure scheduling:
 
@@ -12,15 +13,32 @@ invariant), so every difference below is pure scheduling:
 * ``p50/p99_latency_steps`` — submit-to-last-token in scheduler steps; the
   wave p99 is queue-dominated (a request parked behind full waves).
 
+Two workload sections:
+
+* ``serve/wave`` vs ``serve/continuous`` — the original Zipf workload,
+  cold-start timing (compile included), unchanged from earlier revisions so
+  the numbers stay comparable across history.
+* ``serve/continuous_shared`` / ``serve/prefix`` / ``serve/speculative`` —
+  a prompt-template workload (per-tenant fixed prefixes + Zipf tails,
+  ``shared_prefix_requests``) where each server is WARMED on a disposable
+  copy of the workload first and the timer covers only the steady-state
+  pass: at smoke scale XLA compilation dominates cold walls, and these
+  three rows exist to compare *scheduling*, not compile caches. ``prefix``
+  maps shared prompt pages read-only (no prefill compute for the shared
+  span); ``speculative`` stacks self-draft speculation (``spec_k`` tokens
+  per verify) on top.
+
 Emits ``BENCH_serve.json``. ``--check`` (CI smoke) fails the run unless
-continuous batching strictly beats wave on BOTH utilization and p99 at the
-Zipf workload.
+continuous strictly beats wave (utilization AND p99, Zipf workload) and
+prefix/speculative strictly beat continuous on tokens/s with p99 no worse
+(shared-prefix workload), with token identity within each section.
 """
 from __future__ import annotations
 
 import argparse
 import copy
 import json
+import os
 import time
 
 import jax
@@ -28,18 +46,30 @@ import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.models.registry import build_model
-from repro.runtime.server import WaveServer
-from repro.runtime.serving import ContinuousServer, zipf_requests
+from repro.runtime.server import ServerStats, WaveServer
+from repro.runtime.serving import (ContinuousServer, shared_prefix_requests,
+                                   zipf_requests)
 
 
 def run_one(kind: str, model, params, reqs, *, max_batch: int, max_len: int,
-            page_size: int, prefill_chunk: int) -> dict:
+            page_size: int, prefill_chunk: int, warmup=None,
+            **server_kw) -> dict:
     if kind == "wave":
         srv = WaveServer(model, params, max_batch=max_batch, max_len=max_len)
     else:
         srv = ContinuousServer(model, params, max_batch=max_batch,
                                max_len=max_len, page_size=page_size,
-                               prefill_chunk=prefill_chunk)
+                               prefill_chunk=prefill_chunk, **server_kw)
+    if warmup is not None:
+        # steady-state protocol: drain a disposable copy of the workload
+        # through the SAME server (compiles every graph, and for the prefix
+        # rows populates the tenant prefix index), then zero the stats and
+        # clock so the measured pass starts clean
+        for r in warmup:
+            srv.submit(r)
+        srv.run_until_drained()
+        srv.stats = ServerStats()
+        srv.clock = 0
     for r in reqs:
         srv.submit(r)
     t0 = time.perf_counter()
@@ -53,7 +83,15 @@ def run_one(kind: str, model, params, reqs, *, max_batch: int, max_len: int,
         "p50_latency_steps": stats.p50_latency_steps,
         "p99_latency_steps": stats.p99_latency_steps,
         "wall_s": round(wall, 3),
+        "drained": stats.drained,
+        "timer_excludes_compile": warmup is not None,
     }
+    if server_kw.get("prefix_sharing"):
+        row["shared_prompt_tokens"] = stats.shared_prompt_tokens
+    if server_kw.get("speculative"):
+        row["spec_proposed"] = stats.spec_proposed
+        row["spec_accepted"] = stats.spec_accepted
+        row["acceptance_rate"] = round(stats.acceptance_rate, 4)
     print(f"serve/{kind}: util={row['utilization']:.3f} "
           f"p50={row['p50_latency_steps']:.0f} "
           f"p99={row['p99_latency_steps']:.0f} "
@@ -62,7 +100,11 @@ def run_one(kind: str, model, params, reqs, *, max_batch: int, max_len: int,
 
 
 def check(results: dict) -> list:
-    """Continuous must strictly beat wave on utilization AND p99."""
+    """Continuous must strictly beat wave on utilization AND p99; prefix
+    and speculative must strictly beat plain continuous on tokens/s with
+    p99 no worse, on the shared-prefix workload. Token counts must match
+    within each workload section (identical work, pure scheduling deltas),
+    and every row must have actually drained."""
     fails = []
     c, w = results["serve/continuous"], results["serve/wave"]
     if not c["utilization"] > w["utilization"]:
@@ -75,6 +117,25 @@ def check(results: dict) -> list:
         fails.append(f"token counts diverge: {c['useful_tokens']} vs "
                      f"{w['useful_tokens']} (schedulers must serve "
                      f"identical work)")
+    base = results.get("serve/continuous_shared")
+    for name in ("serve/prefix", "serve/speculative"):
+        row = results.get(name)
+        if base is None or row is None:
+            continue
+        if not row["tokens_per_s"] > base["tokens_per_s"]:
+            fails.append(f"tokens/s: {name} {row['tokens_per_s']} "
+                         f"!> continuous_shared {base['tokens_per_s']}")
+        if not row["p99_latency_steps"] <= base["p99_latency_steps"]:
+            fails.append(f"p99: {name} {row['p99_latency_steps']} "
+                         f"!<= continuous_shared {base['p99_latency_steps']}")
+        if row["useful_tokens"] != base["useful_tokens"]:
+            fails.append(f"token counts diverge: {name} "
+                         f"{row['useful_tokens']} vs continuous_shared "
+                         f"{base['useful_tokens']} (greedy speculative/"
+                         f"prefix output must be token-identical)")
+    for name, row in results.items():
+        if isinstance(row, dict) and row.get("drained") is False:
+            fails.append(f"{name}: run truncated before drain")
     return fails
 
 
@@ -84,10 +145,11 @@ def main():
     ap.add_argument("--small", action="store_true",
                     help="CI-sized workload (fewer requests)")
     ap.add_argument("--check", action="store_true",
-                    help="fail unless continuous strictly beats wave on "
-                         "utilization and p99")
+                    help="fail unless continuous beats wave and "
+                         "prefix/speculative beat continuous (see check())")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--spec-k", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
@@ -103,6 +165,12 @@ def main():
 
     results = {"meta": {"arch": cfg.name, "requests": n_req,
                         "max_batch": args.max_batch, "workload": "zipf-1.2",
+                        "shared_workload": "shared-prefix-64 + zipf-1.2 "
+                                           "tails, 4 tenants",
+                        "spec_k": args.spec_k,
+                        "spec_draft": "self (acceptance-1 regime; the win "
+                                      "is per-tick host overhead amortized "
+                                      "over k tokens)",
                         "seed": args.seed}}
     for kind in ("wave", "continuous"):
         results[f"serve/{kind}"] = run_one(
@@ -110,8 +178,32 @@ def main():
             max_batch=args.max_batch, max_len=max_len, page_size=16,
             prefill_chunk=16)
 
+    shared = shared_prefix_requests(
+        n_req, cfg.vocab_size, n_groups=4, prefix_len=64, alpha=1.2,
+        tail_min=1, tail_max=32, max_new_low=4, max_new_high=32,
+        seed=args.seed)
+    shared_kw = dict(max_batch=args.max_batch, max_len=160, page_size=16,
+                     prefill_chunk=16)
+    results["serve/continuous_shared"] = run_one(
+        "continuous_shared", model, params, copy.deepcopy(shared),
+        warmup=copy.deepcopy(shared), **shared_kw)
+    results["serve/prefix"] = run_one(
+        "prefix", model, params, copy.deepcopy(shared),
+        warmup=copy.deepcopy(shared), prefix_sharing=True, **shared_kw)
+    results["serve/speculative"] = run_one(
+        "speculative", model, params, copy.deepcopy(shared),
+        warmup=copy.deepcopy(shared), prefix_sharing=True, speculative=True,
+        spec_k=args.spec_k, **shared_kw)
+
+    # read-modify-write: rows this run doesn't produce (the launcher's
+    # serve/soak row) survive the regeneration
+    merged = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            merged = json.load(f)
+    merged.update(results)
     with open(args.out, "w") as f:
-        json.dump(results, f, indent=2, sort_keys=True)
+        json.dump(merged, f, indent=2, sort_keys=True)
     print(f"# wrote {args.out}")
 
     failures = check(results)
@@ -121,7 +213,8 @@ def main():
             raise SystemExit(msg)
         print(msg)
     else:
-        print("# check passed: continuous > wave on utilization and p99")
+        print("# check passed: continuous > wave (util, p99); "
+              "prefix & speculative > continuous (tok/s, p99 no worse)")
 
 
 if __name__ == "__main__":

@@ -212,7 +212,10 @@ class Session:
               max_new_tokens: int = 16, prompt=None, params=None,
               scheduler: Optional[str] = None, requests=None,
               max_batch: int = 8, max_len: int = 512, page_size: int = 16,
-              prefill_chunk: int = 16) -> ServeResult:
+              prefill_chunk: int = 16, prefix_sharing: bool = False,
+              speculative: bool = False, spec_k: int = 4,
+              draft_layers: Optional[int] = None,
+              tenant_weights: Optional[dict] = None) -> ServeResult:
         """Greedy decoding, three ways.
 
         ``scheduler=None`` (default): the direct batched prefill + decode
@@ -224,6 +227,12 @@ class Session:
         ``batch_size`` uniform requests of ``prompt_len`` are synthesized.
         Both scheduler modes fill ``ServeResult.stats`` with comparable
         utilization and p50/p99 latency tails.
+
+        Continuous-only layers (``docs/serving.md``): ``prefix_sharing``
+        maps same-tenant shared prompt pages read-only (COW refcounts);
+        ``speculative`` adds draft-propose/verify at ``spec_k`` tokens per
+        tick (``draft_layers`` early-exit draft; None = self-draft);
+        ``tenant_weights`` sets deficit-round-robin admission shares.
 
         ``params`` lets callers bring externally-loaded weights (e.g.
         decrypted through the KDS gate); fresh random init otherwise.
@@ -239,7 +248,12 @@ class Session:
                 scheduler, params, requests, batch_size=batch_size,
                 prompt_len=prompt_len, max_new_tokens=max_new_tokens,
                 max_batch=max_batch, max_len=max_len, page_size=page_size,
-                prefill_chunk=prefill_chunk)
+                prefill_chunk=prefill_chunk, prefix_sharing=prefix_sharing,
+                speculative=speculative, spec_k=spec_k,
+                draft_layers=draft_layers, tenant_weights=tenant_weights)
+        if prefix_sharing or speculative or tenant_weights:
+            raise ValueError("prefix_sharing/speculative/tenant_weights "
+                             "need scheduler='continuous'")
         if prompt is None:
             prompt = jax.random.randint(jax.random.PRNGKey(self.seed + 1),
                                         (batch_size, prompt_len), 0,
@@ -276,7 +290,11 @@ class Session:
     def _serve_scheduled(self, scheduler: str, params, requests, *,
                          batch_size: int, prompt_len: int,
                          max_new_tokens: int, max_batch: int, max_len: int,
-                         page_size: int, prefill_chunk: int) -> ServeResult:
+                         page_size: int, prefill_chunk: int,
+                         prefix_sharing: bool = False,
+                         speculative: bool = False, spec_k: int = 4,
+                         draft_layers: Optional[int] = None,
+                         tenant_weights: Optional[dict] = None) -> ServeResult:
         from repro.runtime.serving import (ContinuousServer, Request,
                                            WaveServer)
 
@@ -288,12 +306,19 @@ class Session:
                                 max_new_tokens=max_new_tokens)
                         for i in range(batch_size)]
         if scheduler == "wave":
+            if prefix_sharing or speculative or tenant_weights:
+                raise ValueError("prefix_sharing/speculative/tenant_weights "
+                                 "need scheduler='continuous'")
             srv = WaveServer(self.model, params, max_batch=max_batch,
                              max_len=max_len)
         elif scheduler == "continuous":
             srv = ContinuousServer(self.model, params, max_batch=max_batch,
                                    max_len=max_len, page_size=page_size,
-                                   prefill_chunk=prefill_chunk)
+                                   prefill_chunk=prefill_chunk,
+                                   prefix_sharing=prefix_sharing,
+                                   speculative=speculative, spec_k=spec_k,
+                                   draft_layers=draft_layers,
+                                   tenant_weights=tenant_weights)
         else:
             raise ValueError(
                 f"unknown scheduler {scheduler!r}: wave | continuous")

@@ -9,16 +9,22 @@ Two kernels back the serving subsystem:
 * ``paged_reset`` — in-kernel zeroing of a slot's pages on admission (the
   leak-freedom half of the contract). Pallas in-place aliasing on TPU, a
   scatter of zeros elsewhere.
+* ``paged_rollback`` — in-kernel zeroing of a *position range* of a slot's
+  logical sequence (the speculative-decoding rejected-tail eraser); same
+  aliasing/donation contract as ``paged_reset``.
 """
 from __future__ import annotations
+
+import jax.numpy as jnp
 
 from repro.kernels.dispatch import REGISTRY, kernel_variant, on_tpu
 from repro.kernels.paged_attention import ref
 from repro.kernels.paged_attention.paged_attention import (
-    paged_attention_pallas, paged_reset_pallas)
+    paged_attention_pallas, paged_reset_pallas, paged_rollback_pallas)
 
 KERNEL = "paged_attention"
 RESET_KERNEL = "paged_reset"
+ROLLBACK_KERNEL = "paged_rollback"
 
 
 @kernel_variant(KERNEL, "pallas", priority=100,
@@ -75,3 +81,45 @@ def paged_reset(k_pages, v_pages, row, impl: str = "auto"):
     rather than keep using the old arrays."""
     return REGISTRY.dispatch(RESET_KERNEL, impl, {"nP": row.shape[0]},
                              k_pages, v_pages, row)
+
+
+@kernel_variant(ROLLBACK_KERNEL, "pallas", priority=100,
+                auto_predicate=lambda ctx: ctx["on_tpu"],
+                doc="in-place rejected-tail zeroing via input_output_aliases")
+def _rollback_pallas(k_pages, v_pages, row, bounds):
+    return paged_rollback_pallas(k_pages, v_pages, row, bounds,
+                                 interpret=not on_tpu())
+
+
+@kernel_variant(ROLLBACK_KERNEL, "jnp", priority=50,
+                doc="scatter-multiply keep-mask reference")
+def _rollback_jnp(k_pages, v_pages, row, bounds):
+    return ref.paged_rollback_ref(k_pages, v_pages, row, bounds)
+
+
+def paged_rollback(k_pages, v_pages, row, start, end, impl: str = "auto"):
+    """Zero logical token positions ``[start, end)`` of block-table row
+    ``row`` across the stacked (L, N, P, H, D) pools; returns the new
+    (k_pages, v_pages). Page ``j`` of the row covers positions
+    ``j*P .. j*P+P-1``; ``start``/``end`` are host ints.
+
+    The row is sliced down to exactly the pages overlapping the range before
+    dispatch: rows pad short tables with duplicate page ids, and a duplicate
+    visit whose mask never fires would write the page's *pre-zeroing*
+    content back over the zeroed lanes (grid visits are not ordered in the
+    kernel's favor). The overlapping slice contains only distinct owned
+    pages, so every physical page is visited at most once. The slice length
+    varies with the range (at most ceil(k/P)+1 shapes for speculative-k
+    rollback), so the compile-cache cost is bounded and tiny.
+
+    Same contract as ``paged_reset``: inputs are CONSUMED (the Pallas path
+    donates them), callers must rebind."""
+    start, end = int(start), int(end)
+    if end <= start:
+        return k_pages, v_pages
+    P = k_pages.shape[2]
+    sp, ep = start // P, -(-end // P)
+    sub = row[sp:ep]
+    bounds = jnp.asarray([start - sp * P, end - sp * P], jnp.int32)
+    return REGISTRY.dispatch(ROLLBACK_KERNEL, impl, {"nP": sub.shape[0]},
+                             k_pages, v_pages, sub, bounds)

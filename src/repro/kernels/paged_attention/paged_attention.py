@@ -160,6 +160,54 @@ def _reset_kernel(row_ref, k_ref, v_ref, ko_ref, vo_ref):
     vo_ref[...] = jnp.zeros_like(vo_ref)
 
 
+def _rollback_kernel(row_ref, bounds_ref, k_ref, v_ref, ko_ref, vo_ref, *,
+                     page_size):
+    """Zero token positions in [start, end) of the slot's logical sequence.
+
+    Page ``j`` of the row covers logical positions ``j*P .. j*P+P-1``; the
+    mask zeroes exactly the rejected speculative tail and writes everything
+    else back unchanged (the out blocks alias the in blocks, so untouched
+    lanes are a no-op write of their own value)."""
+    j = pl.program_id(1)
+    start, end = bounds_ref[0], bounds_ref[1]
+    P = page_size
+    pos = j * P + jax.lax.broadcasted_iota(jnp.int32, (P, 1, 1), 0)
+    dead = (pos >= start) & (pos < end)
+    ko_ref[0, 0] = jnp.where(dead, 0.0, k_ref[0, 0].astype(jnp.float32)) \
+        .astype(ko_ref.dtype)
+    vo_ref[0, 0] = jnp.where(dead, 0.0, v_ref[0, 0].astype(jnp.float32)) \
+        .astype(vo_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",),
+                   donate_argnums=(0, 1))
+def paged_rollback_pallas(k_pages, v_pages, row, bounds, interpret=False):
+    """Zero the K/V of logical token positions ``[bounds[0], bounds[1])`` in
+    block-table row ``row`` across every layer of the stacked (L, N, P, H, D)
+    pools, in place (the speculative-decoding rejected-tail eraser).
+
+    ``row`` must be duplicate-free (unlike ``paged_reset``): a duplicate
+    visit whose mask never fires writes the page's pre-zeroing content back,
+    resurrecting the erased lanes. ``ops.paged_rollback`` guarantees this by
+    slicing the table row down to the distinct owned pages overlapping the
+    range. Inputs are donated like ``paged_reset``: callers must rebind."""
+    L = k_pages.shape[0]
+    nP = row.shape[0]
+    spec = pl.BlockSpec((1, 1) + k_pages.shape[2:],
+                        lambda l, j, row, bounds: (l, row[j], 0, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_rollback_kernel, page_size=k_pages.shape[2]),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, grid=(L, nP),
+            in_specs=[spec, spec], out_specs=[spec, spec],
+        ),
+        out_shape=[jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+                   jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype)],
+        input_output_aliases={2: 0, 3: 1},
+        interpret=interpret,
+    )(row, bounds, k_pages, v_pages)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",),
                    donate_argnums=(0, 1))
 def paged_reset_pallas(k_pages, v_pages, row, interpret=False):

@@ -82,3 +82,23 @@ def paged_reset_ref(k_pages, v_pages, row):
     """Zero block-table row ``row``'s pages in the stacked (L, N, P, H, D)
     pools. Duplicate page ids in the row are fine (idempotent zero)."""
     return (k_pages.at[:, row].set(0.0), v_pages.at[:, row].set(0.0))
+
+
+@jax.jit
+def paged_rollback_ref(k_pages, v_pages, row, bounds):
+    """Zero logical token positions ``[bounds[0], bounds[1])`` of block-table
+    row ``row`` in the stacked (L, N, P, H, D) pools.
+
+    Implemented as a scatter-*multiply* by a 0/1 keep mask rather than a
+    gather/where/set round-trip: a short row pads with duplicate page ids,
+    and with ``set`` the duplicate write (whose logical positions are all
+    past ``end``, hence unmasked) could race the real write and resurrect
+    zeroed lanes. Multiplies compose — the pad visit is a multiply-by-one
+    no-op regardless of ordering."""
+    nP = row.shape[0]
+    P = k_pages.shape[2]
+    pos = jnp.arange(nP)[:, None] * P + jnp.arange(P)[None, :]
+    keep = (~((pos >= bounds[0]) & (pos < bounds[1]))).astype(k_pages.dtype)
+    keep = keep[None, :, :, None, None]
+    return (k_pages.at[:, row].multiply(keep),
+            v_pages.at[:, row].multiply(keep))

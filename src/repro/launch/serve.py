@@ -83,6 +83,22 @@ def main():
                     help="batch slots for the scheduler modes")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="continuous only: map same-tenant shared prompt "
+                         "pages read-only (COW refcounts) instead of "
+                         "re-prefilling them")
+    ap.add_argument("--speculative", action="store_true",
+                    help="continuous only: draft-propose/verify decoding "
+                         "over a parallel draft page pool")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative tokens per tick (draft proposes k-1, "
+                         "one chunk-shaped verify scores all k)")
+    ap.add_argument("--draft-layers", type=int, default=None,
+                    help="early-exit draft depth (first N target layers); "
+                         "default: self-draft (all layers)")
+    ap.add_argument("--tenant-weights", default=None, metavar="a=2,b=1",
+                    help="continuous only: deficit-round-robin admission "
+                         "weights per tenant (unlisted tenants weigh 1)")
     ap.add_argument("--soak", type=int, default=None, metavar="N",
                     help="soak mode: N Zipf requests through the continuous "
                          "scheduler, rolling p99 appended to --out")
@@ -121,12 +137,25 @@ def main():
         print("first sequences:", res.tokens[:2, :8].tolist())
         return
 
+    tenant_weights = None
+    if args.tenant_weights:
+        tenant_weights = {}
+        for part in args.tenant_weights.split(","):
+            name, _, w = part.partition("=")
+            if not _ or not name:
+                raise SystemExit(
+                    f"--tenant-weights: bad entry {part!r} (want name=weight)")
+            tenant_weights[name] = float(w)
     res = sess.serve(batch_size=args.batch, prompt_len=args.prompt_len,
                      max_new_tokens=args.tokens, scheduler=args.scheduler,
                      max_batch=args.max_batch,
                      max_len=args.prompt_len + args.tokens,
                      page_size=args.page_size,
-                     prefill_chunk=args.prefill_chunk)
+                     prefill_chunk=args.prefill_chunk,
+                     prefix_sharing=args.prefix_sharing,
+                     speculative=args.speculative, spec_k=args.spec_k,
+                     draft_layers=args.draft_layers,
+                     tenant_weights=tenant_weights)
     s = res.stats
     print(f"arch={sess.cfg.name} scheduler={args.scheduler} "
           f"requests={args.batch} slots={args.max_batch}")
@@ -134,6 +163,12 @@ def main():
           f"{s.decode_steps} | utilization: {s.utilization:.3f}")
     print(f"latency (steps): p50={s.p50_latency_steps:.0f} "
           f"p99={s.p99_latency_steps:.0f}")
+    if args.prefix_sharing:
+        print(f"shared prompt tokens: {s.shared_prompt_tokens}")
+    if args.speculative:
+        print(f"speculative: proposed={s.spec_proposed} "
+              f"accepted={s.spec_accepted} "
+              f"(acceptance {s.acceptance_rate:.2f})")
     print("first sequences:", res.tokens[:2, :8].tolist())
 
 

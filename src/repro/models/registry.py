@@ -28,10 +28,14 @@ class Model:
     decode_step: Callable[..., Any]
     # paged serving surface (transformer families only; None elsewhere):
     # init_paged_cache(n_pages, page_size) -> pool pytree;
-    # paged_step(params, tokens, pool, tables, q_start, n_valid)
-    #   -> (logits, pool) — one function for both prefill chunks and decode
+    # paged_step(params, tokens, pool, tables, q_start, n_valid,
+    #            logits_mode="last") -> (logits, pool) — one function for
+    #   prefill chunks, decode, and (logits_mode="all") speculative verify
     init_paged_cache: Optional[Callable[..., Any]] = None
     paged_step: Optional[Callable[..., Any]] = None
+    # dtype the paged pool/step run in — the scheduler needs it to build a
+    # draft model that shares the target's page layout
+    compute_dtype: Any = jnp.bfloat16
 
 
 def build_model(cfg: ModelConfig, param_dtype=jnp.float32,
@@ -47,9 +51,12 @@ def build_model(cfg: ModelConfig, param_dtype=jnp.float32,
             decode_step=lambda p, b, c: transformer.decode_step(p, cfg, b, c, compute_dtype),
             init_paged_cache=lambda n_pages, page_size: transformer.init_paged_cache(
                 cfg, n_pages, page_size, compute_dtype),
-            paged_step=lambda p, toks, pool, tables, q_start, n_valid:
+            paged_step=lambda p, toks, pool, tables, q_start, n_valid, \
+                logits_mode="last":
                 transformer.forward_paged(p, cfg, toks, pool, tables,
-                                          q_start, n_valid, compute_dtype),
+                                          q_start, n_valid, compute_dtype,
+                                          logits_mode),
+            compute_dtype=compute_dtype,
         )
     if cfg.family == "ssm":
         return Model(

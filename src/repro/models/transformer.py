@@ -157,7 +157,8 @@ def layer_apply_paged(p, x, cfg: ModelConfig, positions, k_pages, v_pages,
 
 
 def forward_paged(params, cfg: ModelConfig, tokens, pages: dict, tables,
-                  q_start, n_valid, compute_dtype=jnp.bfloat16):
+                  q_start, n_valid, compute_dtype=jnp.bfloat16,
+                  logits_mode="last"):
     """One serving step over the paged pool: C new tokens per slot (C > 1 =
     a prefill chunk, C == 1 = decode; both shapes share this one function,
     so the scheduler keeps exactly two compiled graphs).
@@ -165,7 +166,13 @@ def forward_paged(params, cfg: ModelConfig, tokens, pages: dict, tables,
     tokens (B, C) i32; tables (B, nP) i32; q_start (B,) tokens already
     cached per slot; n_valid (B,) how many of the C are real (0 = inactive
     slot — its row computes garbage on zeroed pages and writes nothing).
-    Returns (logits (B, V) of each slot's last valid token, new pages)."""
+
+    logits_mode "last" returns (B, V) logits of each slot's last valid
+    token (the prefill/decode shape). "all" returns (B, C, V) logits at
+    every chunk position — the speculative-verify read-out, where position
+    c scores the token *following* tokens[:, c]. Both modes run the same
+    layer stack, so a chunk-shaped "all" graph is the only addition the
+    speculative scheduler needs for verification."""
     x = params["embed"].astype(compute_dtype)[tokens]
     B, S = tokens.shape
     positions = q_start[:, None] + jnp.arange(S)[None, :]
@@ -179,11 +186,14 @@ def forward_paged(params, cfg: ModelConfig, tokens, pages: dict, tables,
     x, (k_pages, v_pages) = jax.lax.scan(
         body, x, (params["layers"], pages["k_pages"], pages["v_pages"]))
     x = rmsnorm(params["ln_f"], x)
-    last = jnp.clip(n_valid - 1, 0, S - 1)                     # (B,)
-    x = jnp.take_along_axis(x, last[:, None, None], axis=1)    # (B, 1, D)
     head = params.get("lm_head", None)
     if head is None:
         head = params["embed"].T
+    if logits_mode == "all":
+        logits = x @ head.astype(x.dtype)                      # (B, C, V)
+        return logits, {"k_pages": k_pages, "v_pages": v_pages}
+    last = jnp.clip(n_valid - 1, 0, S - 1)                     # (B,)
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)    # (B, 1, D)
     logits = (x @ head.astype(x.dtype))[:, 0]
     return logits, {"k_pages": k_pages, "v_pages": v_pages}
 

@@ -17,6 +17,7 @@ request's K/V).
 from __future__ import annotations
 
 import collections
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -49,10 +50,24 @@ class ServerStats:
     # per-request latency in scheduler steps (finish - submit), appended at
     # completion — the comparable tail metric across wave and continuous
     latencies: list = field(default_factory=list)
+    # False when run_until_drained stopped on its step budget with requests
+    # still queued or in flight — the latency percentiles then describe a
+    # TRUNCATED trace (survivorship-biased: the slow tail never finished)
+    drained: bool = True
+    # prefix sharing: prompt tokens whose prefill was skipped because their
+    # pages were mapped read-only from the tenant's prefix index
+    shared_prompt_tokens: int = 0
+    # speculative decoding: draft proposals made / accepted by the verifier
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
     @property
     def utilization(self) -> float:
         return self.useful_tokens / max(self.slot_tokens, 1)
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.spec_accepted / max(self.spec_proposed, 1)
 
     def _pct(self, q: float) -> float:
         if not self.latencies:
@@ -145,4 +160,11 @@ class WaveServer:
             if not wave:
                 break
             self._run_wave(wave)
+        self.stats.drained = not self.buckets
+        if self.buckets:
+            leftover = sum(len(q) for q in self.buckets.values())
+            warnings.warn(
+                f"run_until_drained stopped at max_waves={max_waves} with "
+                f"{leftover} requests still queued — stats cover a "
+                f"truncated trace", RuntimeWarning, stacklevel=2)
         return self.stats

@@ -3,9 +3,9 @@ cache. ``Request``/``ServerStats`` are re-exported from ``runtime.server``
 so both schedulers share one surface (the wave server stays the measured
 baseline)."""
 from repro.runtime.server import Request, ServerStats, WaveServer
-from repro.runtime.serving.load import zipf_requests
+from repro.runtime.serving.load import shared_prefix_requests, zipf_requests
 from repro.runtime.serving.paged_cache import PagePool
 from repro.runtime.serving.scheduler import ContinuousServer
 
 __all__ = ["Request", "ServerStats", "WaveServer", "PagePool",
-           "ContinuousServer", "zipf_requests"]
+           "ContinuousServer", "zipf_requests", "shared_prefix_requests"]

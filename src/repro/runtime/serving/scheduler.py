@@ -9,12 +9,35 @@ in-kernel (``PagePool.alloc``). Prefill is chunked into the decode loop: an
 admitted request advances one ``prefill_chunk`` of its prompt per step while
 other slots keep decoding, so a long prompt never stalls the batch.
 
-Exactly two compiled graphs run everything, regardless of admission order:
+Admission is weighted deficit-round-robin over per-tenant subqueues:
+each tenant accrues credit in proportion to its weight while it waits and
+spends one credit per admitted request, which converges to weighted shares
+under backlog while staying strictly FIFO *within* each tenant. Subqueues
+also make admission O(free slots x tenants) instead of the old O(queue^2)
+scan-and-remove, and the scan stops outright once every backlogged tenant
+is at its slot cap.
 
-* the chunk graph  — ``paged_step`` at (n_slots, prefill_chunk); slots not
-  prefilling ride along with ``n_valid = 0``;
-* the decode graph — ``paged_step`` at (n_slots, 1) over every slot, active
-  or not (``n_valid`` masks the rest).
+Two opt-in throughput layers ride on the same pool, both leak-free by
+construction:
+
+* **Prefix sharing** (``prefix_sharing=True``): an admitted request whose
+  prompt starts with full pages already cached *for its own tenant* maps
+  those pages read-only (refcounted, never zeroed, never written — the COW
+  boundary is where its fresh pages begin) and starts prefill at the shared
+  boundary. Cross-tenant sharing is structurally impossible: the tenant id
+  is part of the prefix-index key (see ``paged_cache``).
+* **Speculative decoding** (``speculative=True``): a draft model — the
+  first ``draft_layers`` layers of the target, sharing its embedding and
+  head — proposes ``spec_k - 1`` tokens per tick from a parallel draft
+  pool (same page ids, same tables), and the target verifies all of them
+  in ONE chunk-shaped ``paged_step`` call (``logits_mode="all"`` — the same
+  function and kernels as prefill, with a full-chunk readout). Greedy
+  accept keeps the emitted stream token-identical to the non-speculative
+  scheduler (a test invariant, like the wave parity); the rejected tail is
+  erased in-kernel (``PagePool.rollback``) from both pools before the next
+  tick. The compiled-graph budget stays flat: the draft brings its own
+  decode/chunk pair, verification is one extra readout variant of the
+  existing chunk graph, and the target's plain decode graph is retired.
 
 Shapes never depend on which requests are in flight — per-request variation
 lives entirely in the block tables, lengths and validity masks, which are
@@ -23,11 +46,15 @@ each other's freed runs.
 
 Token-for-token equivalence with the wave baseline (greedy argmax over the
 same model) is a test invariant, not an aspiration: ``tests/test_serving.py``
-asserts it under randomized admission/finish orders.
+asserts it under randomized admission/finish orders, and asserts the
+speculative scheduler emits the identical stream.
 """
 from __future__ import annotations
 
 import collections
+import dataclasses
+import functools
+import warnings
 from dataclasses import dataclass
 from typing import Optional
 
@@ -55,31 +82,75 @@ def _bucket_pages(tokens_needed: int, page_size: int, cap: int) -> int:
     return min(b, cap)
 
 
+def _draft_of(model, params, draft_layers: Optional[int]):
+    """Build the draft (model, params) pair: the first ``draft_layers``
+    layers of the target with the target's own embedding/final-norm/head
+    (an early-exit draft — no second set of weights to train or ship).
+    ``draft_layers=None`` or ``== n_layers`` is the self-draft degenerate
+    case: the draft IS the target, acceptance is ~1, and the win comes
+    purely from amortizing per-tick scheduler overhead over k tokens."""
+    from repro.models.registry import build_model
+    cfg = model.cfg
+    Ld = cfg.n_layers if draft_layers is None else int(draft_layers)
+    if not 1 <= Ld <= cfg.n_layers:
+        raise ValueError(f"draft_layers={draft_layers} out of range for a "
+                         f"{cfg.n_layers}-layer target")
+    draft_model = build_model(dataclasses.replace(cfg, n_layers=Ld),
+                              compute_dtype=model.compute_dtype)
+    if Ld == cfg.n_layers:
+        return draft_model, params
+    draft_params = dict(params)
+    draft_params["layers"] = jax.tree_util.tree_map(
+        lambda x: x[:Ld], params["layers"])
+    return draft_model, draft_params
+
+
 class ContinuousServer:
     """Same submit/run surface as ``WaveServer``; continuous batching over
-    a paged, slot-recycled KV cache."""
+    a paged, slot-recycled KV cache, with optional same-tenant prefix
+    sharing and speculative decoding."""
 
     def __init__(self, model, params, *, max_batch: int = 8,
                  max_len: int = 512, page_size: int = 16,
                  prefill_chunk: int = 16, n_pages: Optional[int] = None,
                  trace_logits: bool = False,
-                 max_slots_per_tenant: Optional[int] = None):
+                 max_slots_per_tenant: Optional[int] = None,
+                 tenant_weights: Optional[dict] = None,
+                 prefix_sharing: bool = False,
+                 speculative: bool = False, spec_k: int = 4,
+                 draft_layers: Optional[int] = None):
         self.model = model
         self.params = params
         self.n_slots = max_batch
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
+        self.prefix_sharing = prefix_sharing
+        self.speculative = speculative
+        self.spec_k = spec_k
+        draft_model = self.draft_params = None
+        if speculative:
+            if spec_k < 2:
+                raise ValueError("spec_k must be >= 2 (k=1 is plain decode)")
+            draft_model, self.draft_params = _draft_of(model, params,
+                                                       draft_layers)
         per_slot = -(-max_len // page_size)
         self.pool = PagePool(model, n_slots=max_batch,
                              n_pages=n_pages or max_batch * per_slot,
-                             page_size=page_size, pages_per_slot=per_slot)
+                             page_size=page_size, pages_per_slot=per_slot,
+                             draft_model=draft_model,
+                             prefix_index=prefix_sharing)
         self.slots: list[Optional[_Slot]] = [None] * max_batch
         # per-tenant admission cap: one tenant's burst cannot monopolize the
         # batch (and with it the page pool) — the confidential-serving
         # analogue of the training tier's per-silo budget isolation.
         # Requests with tenant=None are exempt (single-operator use)
         self.max_slots_per_tenant = max_slots_per_tenant
-        self.queue: collections.deque[Request] = collections.deque()
+        # per-tenant FIFO subqueues of (submit seq, request) + DRR credit
+        self.tenant_weights = dict(tenant_weights or {})
+        self.queues: dict[Optional[str], collections.deque] = {}
+        self._deficit: dict[Optional[str], float] = {}
+        self._seq = 0
+        self.queued = 0
         self.stats = ServerStats()
         self.clock = 0  # scheduler steps; the latency currency
         # rid -> [logits row per generated token]; the leak-freedom probe
@@ -88,6 +159,33 @@ class ContinuousServer:
         self.trace_logits = trace_logits
         self.logit_trace: dict[int, list[np.ndarray]] = {}
         self._step_fn = jax.jit(model.paged_step, donate_argnums=(2,))
+        if speculative:
+            self._draft_fn = jax.jit(draft_model.paged_step,
+                                     donate_argnums=(2,))
+            self._verify_fn = jax.jit(
+                functools.partial(model.paged_step, logits_mode="all"),
+                donate_argnums=(2,))
+
+            def _propose(dp, pool, tables, base, t0, keff):
+                """All spec_k - 1 draft proposals in ONE device call: a scan
+                of the draft's decode step, greedy argmax feeding the next
+                step on-device. k - 1 separate dispatches would pay the
+                host-sync tax speculation exists to amortize."""
+                import jax.numpy as jnp
+
+                def body(carry, j):
+                    pool, cur = carry
+                    nv = jnp.where(j < keff - 1, 1, 0).astype(jnp.int32)
+                    logits, pool = draft_model.paged_step(
+                        dp, cur[:, None], pool, tables, base + j, nv)
+                    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+                    return (pool, nxt), nxt
+
+                (pool, _), props = jax.lax.scan(
+                    body, (pool, t0), jnp.arange(spec_k - 1))
+                return jnp.transpose(props), pool
+
+            self._propose_fn = jax.jit(_propose, donate_argnums=(1,))
 
     # ------------------------------------------------------------------ queue
     def submit(self, req: Request) -> None:
@@ -95,36 +193,65 @@ class ContinuousServer:
             raise ValueError(
                 f"request {req.rid} exceeds max_len {self.max_len}")
         req.submit_step = self.clock
-        self.queue.append(req)
+        self.queues.setdefault(req.tenant, collections.deque()).append(
+            (self._seq, req))
+        self._seq += 1
+        self.queued += 1
 
     # ------------------------------------------------------------- lifecycle
     def _tenant_slots(self, tenant: str) -> int:
         return sum(1 for s in self.slots
                    if s is not None and s.req.tenant == tenant)
 
-    def _tenant_ok(self, req: Request) -> bool:
-        return (self.max_slots_per_tenant is None or req.tenant is None
-                or self._tenant_slots(req.tenant) < self.max_slots_per_tenant)
+    def _tenant_ok(self, tenant: Optional[str]) -> bool:
+        return (self.max_slots_per_tenant is None or tenant is None
+                or self._tenant_slots(tenant) < self.max_slots_per_tenant)
+
+    def _weight(self, tenant: Optional[str]) -> float:
+        return float(self.tenant_weights.get(tenant, 1.0))
 
     def _admit(self) -> None:
+        """Weighted deficit-round-robin over per-tenant subqueues, one pick
+        per free slot. Each successful admission pays the picked tenant one
+        credit and accrues weight-proportional credit to every tenant still
+        waiting, so long-run admissions converge to the weight ratios while
+        a capped tenant can neither head-of-line-block others (its subqueue
+        is simply ineligible) nor bank unbounded credit (accrual is
+        normalized: one credit total is minted per admission)."""
         for i in range(self.n_slots):
-            if not self.queue:
+            if self.queued == 0:
                 return
             if self.slots[i] is not None:
                 continue
-            # first queued request whose tenant is under its slot cap: a
-            # capped tenant waits, but must not head-of-line-block the other
-            # tenants (admission stays FIFO *within* each tenant — the scan
-            # takes the earliest admissible request)
-            req = next((r for r in self.queue if self._tenant_ok(r)), None)
-            if req is None:
-                return
+            eligible = [t for t, q in self.queues.items()
+                        if q and self._tenant_ok(t)]
+            if not eligible:
+                return  # every backlogged tenant capped: stop scanning
+            t_star = max(eligible, key=lambda t: (self._deficit.get(t, 0.0),
+                                                  -self.queues[t][0][0]))
+            req = self.queues[t_star][0][1]
+            shared = (self.pool.prefix_lookup(req.tenant, req.prompt)
+                      if self.prefix_sharing else [])
             need = _bucket_pages(len(req.prompt) + req.max_new_tokens,
-                                 self.pool.page_size, self.pool.tables.shape[1])
-            if not self.pool.alloc(i, need):
+                                 self.pool.page_size,
+                                 self.pool.tables.shape[1])
+            if not self.pool.alloc(i, need, shared=shared):
                 return  # pool pressure: retry next step, keep FIFO order
-            self.queue.remove(req)
-            self.slots[i] = _Slot(req)
+            self.queues[t_star].popleft()
+            self.queued -= 1
+            backlogged = [t for t, q in self.queues.items() if q]
+            if backlogged:
+                W = sum(self._weight(t) for t in backlogged)
+                for t in backlogged:
+                    self._deficit[t] = (self._deficit.get(t, 0.0)
+                                        + self._weight(t) / W)
+            self._deficit[t_star] = self._deficit.get(t_star, 0.0) - 1.0
+            if not self.queues[t_star]:
+                del self.queues[t_star]
+                self._deficit.pop(t_star, None)
+            S0 = len(shared) * self.pool.page_size
+            self.stats.shared_prompt_tokens += S0
+            self.slots[i] = _Slot(req, pos=S0)
 
     def _finish(self, i: int, req: Request) -> None:
         req.done = True
@@ -158,6 +285,13 @@ class ContinuousServer:
             chunk = s.req.prompt[s.pos:s.pos + C]
             tokens[i, :len(chunk)] = chunk
             n_valid[i] = len(chunk)
+        if self.speculative:
+            # keep the draft cache in lockstep: same tokens into the draft
+            # pool, logits discarded — this is what makes a later sharer's
+            # draft cache warm over shared prefix pages too
+            _, self.pool.draft_pages = self._draft_fn(
+                self.draft_params, tokens, self.pool.draft_pages,
+                self.pool.tables, self.pool.lengths, n_valid)
         logits, self.pool.pages = self._step_fn(
             self.params, tokens, self.pool.pages,
             self.pool.tables, self.pool.lengths, n_valid)
@@ -166,6 +300,9 @@ class ContinuousServer:
             s = self.slots[i]
             s.pos += int(n_valid[i])
             self.pool.lengths[i] += int(n_valid[i])
+            if self.prefix_sharing:
+                self.pool.register_prefix(i, s.req.tenant, s.req.prompt,
+                                          s.pos)
             if s.pos == len(s.req.prompt):
                 # prefill done: the chunk's last-valid logits give the first
                 # generated token (same source as the wave's prefill logits)
@@ -199,28 +336,104 @@ class ContinuousServer:
             if not self._append(i, tok):
                 self.slots[i].pending = tok
 
+    def _run_spec_decode(self) -> None:
+        """One speculative tick for every decode-ready slot: ``k_eff - 1``
+        draft proposals, one combined chunk-shaped verify, greedy accept,
+        in-kernel rollback of the rejected tail in both pools.
+
+        ``k_eff = min(spec_k, remaining budget)`` per slot: the bucketed
+        allocation covers exactly prompt + max_new tokens, so speculating
+        past the budget would write K/V past the slot's page capacity."""
+        k = self.spec_k
+        idx = [i for i, s in enumerate(self.slots)
+               if s is not None and s.pending is not None]
+        if not idx:
+            return
+        k_eff = {i: min(k, self.slots[i].req.max_new_tokens
+                        - len(self.slots[i].req.generated)) for i in idx}
+        base = self.pool.lengths.copy()
+        props = {i: [self.slots[i].pending] for i in idx}
+        t0 = np.zeros((self.n_slots,), np.int32)
+        keff_arr = np.zeros((self.n_slots,), np.int32)
+        for i in idx:
+            t0[i] = props[i][0]
+            keff_arr[i] = k_eff[i]
+        drafted, self.pool.draft_pages = self._propose_fn(
+            self.draft_params, self.pool.draft_pages, self.pool.tables,
+            base, t0, keff_arr)
+        drafted = np.asarray(drafted)  # (n_slots, k-1); cols >= k_eff-1 junk
+        for i in idx:
+            props[i] += [int(t) for t in drafted[i, :k_eff[i] - 1]]
+        tokens = np.zeros((self.n_slots, k), np.int32)
+        n_valid = np.zeros((self.n_slots,), np.int32)
+        for i in idx:
+            tokens[i, :k_eff[i]] = props[i]
+            n_valid[i] = k_eff[i]
+        vlogits, self.pool.pages = self._verify_fn(
+            self.params, tokens, self.pool.pages,
+            self.pool.tables, base, n_valid)
+        vlogits = np.asarray(vlogits)  # (n_slots, k, V)
+        for i in idx:
+            ke, p = k_eff[i], props[i]
+            # row j scores the token following p[j]; g[j] is therefore the
+            # ground-truth stream, exactly what sequential decode would emit
+            g = [int(np.argmax(vlogits[i, j])) for j in range(ke)]
+            a = 0
+            while a < ke - 1 and p[a + 1] == g[a]:
+                a += 1
+            self.stats.spec_proposed += ke - 1
+            self.stats.spec_accepted += a
+            done = False
+            for j in range(a + 1):
+                if self.trace_logits:
+                    self.logit_trace.setdefault(
+                        self.slots[i].req.rid, []).append(vlogits[i, j].copy())
+                if self._append(i, g[j]):
+                    done = True  # _finish released the slot: no rollback —
+                    break        # its fresh pages are refcount-0 and will be
+                #                  zeroed by the next admission as usual
+            if not done:
+                final = int(base[i]) + a + 1
+                self.pool.rollback(i, final, int(base[i]) + ke)
+                self.pool.lengths[i] = final
+                self.slots[i].pending = g[a]
+
     def step(self) -> None:
-        """One scheduler tick: admit into free slots, decode every ready
-        slot, advance every mid-prefill slot by one chunk. Decode runs
-        before the chunk pass so a slot completing prefill starts decoding
-        next tick — at most one token per slot per tick, which is the wave
-        loop's cadence and what makes the stats comparable.
+        """One scheduler tick: admit into free slots, decode (or
+        speculatively decode) every ready slot, advance every mid-prefill
+        slot by one chunk. Decode runs before the chunk pass so a slot
+        completing prefill starts decoding next tick — at most one token
+        per slot per tick in plain mode (the wave loop's cadence, which is
+        what makes the stats comparable), up to ``spec_k`` in speculative
+        mode.
 
         Utilization accounting also mirrors the wave loop exactly: a tick
         that HARVESTS tokens is charged a full batch of slots (idle and
-        mid-prefill slots are the measured tax); prefill compute itself is
-        free, like the wave's uncharged prefill call."""
+        mid-prefill slots are the measured tax) — times ``spec_k`` in
+        speculative mode, where every slot had k chances; prefill compute
+        itself is free, like the wave's uncharged prefill call."""
         self.clock += 1
         before = self.stats.useful_tokens
         self._admit()
-        self._run_decode()
+        if self.speculative:
+            self._run_spec_decode()
+        else:
+            self._run_decode()
         self._run_prefill_chunks()
         if self.stats.useful_tokens > before:
             self.stats.decode_steps += 1
-            self.stats.slot_tokens += self.n_slots
+            self.stats.slot_tokens += self.n_slots * (
+                self.spec_k if self.speculative else 1)
 
     def run_until_drained(self, max_steps: int = 100_000) -> ServerStats:
-        while (self.queue or any(s is not None for s in self.slots)) \
+        while (self.queued or any(s is not None for s in self.slots)) \
                 and self.clock < max_steps:
             self.step()
+        leftover = self.queued + sum(s is not None for s in self.slots)
+        self.stats.drained = leftover == 0
+        if leftover:
+            warnings.warn(
+                f"run_until_drained stopped at max_steps={max_steps} with "
+                f"{leftover} requests still in flight — stats cover a "
+                f"truncated trace", RuntimeWarning, stacklevel=2)
         return self.stats

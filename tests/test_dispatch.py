@@ -141,6 +141,7 @@ EXPECTED_IMPLS = {
     "mamba2_ssd": {"pallas", "jnp", "sequential"},
     "paged_attention": {"pallas", "gather", "jnp"},
     "paged_reset": {"pallas", "jnp"},
+    "paged_rollback": {"pallas", "jnp"},
     "rwkv6_wkv": {"pallas", "jnp", "masked", "sequential"},
     "zsmask": {"pallas", "jnp"},
     "zsmask_tree": {"packed", "perleaf", "pallas", "jnp"},
