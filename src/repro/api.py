@@ -389,11 +389,25 @@ class CollaborativeSession:
     _bcast_layout: Any = None
     _bcast_epoch: int = 0
     wire_stats: Any = None  # per-session bytes-on-wire counters
+    # fault-tolerance plane (docs/failure_model.md): an optional
+    # FaultInjector driving seeded chaos, and the per-session counters the
+    # chaos bench reports. ``_downed`` tracks silos dropped by deadline/
+    # quorum closure (silo -> round it went down) for later rejoin.
+    chaos: Any = None
+    fault_stats: Any = None
 
     def __post_init__(self):
         if self.wire_stats is None:
             self.wire_stats = {"rounds": 0, "broadcast_bytes": 0,
                                "resync_bytes": 0, "update_bytes": 0}
+        if self.fault_stats is None:
+            self.fault_stats = {"transient_retries": 0, "kds_retries": 0,
+                                "integrity_failures": [],
+                                "rounds_replayed": 0, "quorum_closures": 0,
+                                "deadline_hits": 0, "updater_recoveries": 0}
+        self._downed: dict = {}
+        self._inflight: dict = {}  # silo -> Future still running past deadline
+        self._stats_lock = threading.Lock()
 
     @classmethod
     def from_silos(cls, silo_data: list, privacy: PrivacyConfig, *,
@@ -403,7 +417,8 @@ class CollaborativeSession:
                    codec: str = "packed",
                    params_template=None,
                    batch_mac: Optional[bool] = None,
-                   shard_workers: Optional[int] = None) -> "CollaborativeSession":
+                   shard_workers: Optional[int] = None,
+                   received_cap: Optional[int] = None) -> "CollaborativeSession":
         """``silo_data``: one batch dict per dataset owner (stays silo-local).
         ``silo_epsilon_budget``/``silo_budgets`` arm per-owner budget
         enforcement; the ledger config joins the attestation measurement, so
@@ -465,6 +480,11 @@ class CollaborativeSession:
         updater.attest(svc.policy)
         updater.shard_workers = shard_workers if shard_workers is not None \
             else (4 if n >= 32 else 0)
+        # audit-trail bound scales with the session: at n=400 the old fixed
+        # 256 silently dropped most of a single round's trail. Overflow is
+        # counted in updater.truncated_entries either way.
+        updater.received_cap = received_cap if received_cap is not None \
+            else max(256, 2 * n)
         for h in handlers:
             updater.channels[h.name] = SecureChannel(
                 svc.kds._records[f"dk-{h.silo_idx}"].key, h.name,
@@ -529,18 +549,44 @@ class CollaborativeSession:
         blocking full resync) inside its first round back. The warm resync
         rides the same epoch-tagged wire path, so a handler that somehow
         missed it still degrades to the in-round resync rather than applying
-        a stale delta."""
-        from repro.core.tee.channels import SecureChannel, VER_FAST, VER_LEGACY
+        a stale delta.
 
-        if not self.membership.rejoin(silo, step=self._next_round,
-                                      override=override):
-            return False
+        Failure discipline (docs/failure_model.md): a transient KDS denial
+        (:class:`~repro.core.tee.faults.KdsTransientDenial`) is retried with
+        deterministic-jitter exponential backoff; an attestation
+        ``PermissionError`` is an integrity failure and propagates
+        immediately. Membership flips LAST — after attestation and key
+        release succeed — so any failure leaves membership untouched
+        (fail closed, flip exactly once on success)."""
+        from repro.core.tee.channels import SecureChannel, VER_FAST, VER_LEGACY
+        from repro.core.tee.faults import Backoff, KdsTransientDenial
+
+        if silo in self.membership.excluded and not override:
+            # budget-excluded: refuse BEFORE attesting or touching the KDS
+            # (membership.rejoin records the refusal event, mutates nothing)
+            return self.membership.rejoin(silo, step=self._next_round,
+                                          override=False)
         h = self.handlers[silo]
         # fresh attestation against the live policy: a handler whose
         # measurement drifted while it was out gets no key, and therefore
         # no channel — the rejoin fails closed
         h.attest(self.service.policy)
-        key = self.service.kds.request_key(f"dk-{silo}", h.report)
+        backoff = Backoff(seed=silo)
+        while True:
+            try:
+                key = self.service.kds.request_key(f"dk-{silo}", h.report)
+                break
+            except KdsTransientDenial:
+                # transient release hiccup: retry with backoff. A
+                # PermissionError (measurement/policy mismatch) is an
+                # integrity failure — it propagates, membership untouched.
+                with self._stats_lock:
+                    self.fault_stats["kds_retries"] += 1
+                if not backoff.sleep():
+                    raise
+        if not self.membership.rejoin(silo, step=self._next_round,
+                                      override=override):
+            return False
         ver = VER_FAST if self.codec == "packed" else VER_LEGACY
         # both channel ends are rebuilt so the replay counters restart in
         # sync (the dropped handler's old counters are gone with its session)
@@ -606,6 +652,41 @@ class CollaborativeSession:
         return wire.encode_full(self._bcast_layout, self._bcast_buf,
                                 epoch=self._bcast_epoch)
 
+    def _compute_one(self, h, blob: bytes, plan: dict, grad_fn: Callable,
+                     admin_row) -> bytes:
+        """One handler's round-trip: compute_update with the in-round
+        StaleParamsError -> full-resync retry, per-party timing into the
+        straggler telemetry, update bytes into the wire counters. Shared by
+        the serial collect loop and the deadline/quorum tolerant collect."""
+        from repro.core.tee import wire
+
+        active = plan["active"]
+        t0 = time.perf_counter()
+        try:
+            u = h.compute_update(blob, grad_fn, self.privacy,
+                                 plan["keys"], self.n_silos,
+                                 clip_bound=self.clip_bound,
+                                 active=active,
+                                 noise_state=plan["noise_state"],
+                                 verdicts=plan["verdicts"],
+                                 admin_row=admin_row)
+        except wire.StaleParamsError:
+            with self._stats_lock:
+                full = self._resync_blob()
+                self.wire_stats["resync_bytes"] += len(full)
+            u = h.compute_update(full, grad_fn, self.privacy,
+                                 plan["keys"], self.n_silos,
+                                 clip_bound=self.clip_bound,
+                                 active=active,
+                                 noise_state=plan["noise_state"],
+                                 verdicts=plan["verdicts"],
+                                 admin_row=admin_row)
+        with self._stats_lock:
+            # real per-party timing feeds straggler attribution
+            self.telemetry.observe(h.silo_idx, time.perf_counter() - t0)
+            self.wire_stats["update_bytes"] += len(u)
+        return u
+
     def _collect_updates(self, params, plan: dict, grad_fn: Callable,
                          sink: Optional[Callable] = None) -> dict:
         """Distribute params + keys to the round's active handlers and
@@ -635,33 +716,9 @@ class CollaborativeSession:
                 self.privacy, params, plan["keys"], active,
                 plan["noise_state"], self.clip_bound)
         handlers = [h for h in self.handlers if active[h.silo_idx]]
-        lock = threading.Lock()
 
         def one(h):
-            t0 = time.perf_counter()
-            try:
-                u = h.compute_update(blob, grad_fn, self.privacy,
-                                     plan["keys"], self.n_silos,
-                                     clip_bound=self.clip_bound,
-                                     active=active,
-                                     noise_state=plan["noise_state"],
-                                     verdicts=plan["verdicts"],
-                                     admin_row=admin_row)
-            except wire.StaleParamsError:
-                with lock:
-                    full = self._resync_blob()
-                    self.wire_stats["resync_bytes"] += len(full)
-                u = h.compute_update(full, grad_fn, self.privacy,
-                                     plan["keys"], self.n_silos,
-                                     clip_bound=self.clip_bound,
-                                     active=active,
-                                     noise_state=plan["noise_state"],
-                                     verdicts=plan["verdicts"],
-                                     admin_row=admin_row)
-            with lock:
-                # real per-party timing feeds straggler attribution
-                self.telemetry.observe(h.silo_idx, time.perf_counter() - t0)
-                self.wire_stats["update_bytes"] += len(u)
+            u = self._compute_one(h, blob, plan, grad_fn, admin_row)
             if sink is not None:
                 sink(h.name, u)
             return u
@@ -710,7 +767,12 @@ class CollaborativeSession:
 
     def run(self, params, grad_fn: Callable, update_fn: Callable, lr: float,
             n_rounds: int, pipelined: bool = True,
-            speculative: bool = False):
+            speculative: bool = False,
+            round_timeout_s: Optional[float] = None,
+            quorum: Optional[int] = None,
+            chaos: Any = None,
+            journal: Any = None,
+            rejoin_after: Optional[int] = 2):
         """Drive ``n_rounds`` of the protocol. ``pipelined=True`` streams
         each handler's sealed update into the updater's ingestion thread as
         soon as it is produced (decrypt + decode + accumulate of silo i
@@ -737,7 +799,36 @@ class CollaborativeSession:
         exactly the epoch-tag guard of the delta broadcast) and mid-round
         membership changes degrade to the serial path rather than diverging.
         Speculative rounds are bit-identical to serial :meth:`step` loops.
-        Returns (params, [per-round mean losses])."""
+        Returns (params, [per-round mean losses]).
+
+        Fault-tolerant mode (``round_timeout_s``/``quorum``/``chaos``/
+        ``journal`` — docs/failure_model.md): handlers are dispatched
+        concurrently; the round closes once a quorum of expected updates has
+        landed and the deadline has expired. Non-responders are routed
+        through the elastic machinery (``SiloMembership`` drop + active-set
+        shrink + ledger recording only actual contributors) and the round is
+        REPLAYED over the realized set — it then literally IS a scheduled
+        elastic round, so a quorum-closed round is bit-identical to a
+        fault-free elastic run with the same participation sets. Transient
+        faults (dropped blob, KDS denial, stale params) retry with
+        deterministic-jitter backoff; integrity failures (bad MAC, Merkle
+        leaf mismatch) are never retried — the tainted aggregate is
+        discarded, the silo attributed and dropped. ``chaos`` takes a
+        :class:`~repro.core.tee.faults.FaultInjector`; ``journal`` a
+        :class:`~repro.core.tee.faults.RoundJournal` (each committed round
+        is journaled; an updater crash between ingest and finish_round
+        discards the partial round and replays it bit-exactly; after a
+        driver restart :meth:`resume` continues from the journal).
+        ``rejoin_after``: rounds a dropped silo sits out before the session
+        re-admits it through :meth:`rejoin_silo_async` (re-attest, KDS
+        re-release with backoff, warm resync); None = never."""
+        if round_timeout_s is not None or chaos is not None \
+                or journal is not None or quorum is not None:
+            if chaos is not None:
+                self.chaos = chaos
+            return self._run_tolerant(params, grad_fn, update_fn, lr,
+                                      n_rounds, round_timeout_s, quorum,
+                                      journal, rejoin_after)
         if speculative:
             pipelined = True
         spec_flags = [h.speculative for h in self.handlers]
@@ -778,10 +869,24 @@ class CollaborativeSession:
                 rs = self.updater.begin_round(params, expected=expected,
                                               batch_mode=self.batch_mac)
                 ingests = []
-                updates = self._collect_updates(
-                    params, plan, grad_fn,
-                    sink=lambda name, blob: ingests.append(
-                        ex.submit(self.updater.ingest, rs, name, blob)))
+
+                def sink(name, blob):
+                    # fail fast: if an earlier ingest already died on the
+                    # updater thread, abort the collection NOW with that
+                    # error (chained, so the thread's traceback survives)
+                    # instead of computing the remaining handlers' updates
+                    # against a round that can no longer commit
+                    for ing in ingests:
+                        if ing.done() and ing.exception() is not None:
+                            raise RuntimeError(
+                                f"updater ingestion thread failed mid-round "
+                                f"(before {name}'s update was submitted)"
+                            ) from ing.exception()
+                    ingests.append(
+                        ex.submit(self.updater.ingest, rs, name, blob))
+
+                updates = self._collect_updates(params, plan, grad_fn,
+                                                sink=sink)
                 for ing in ingests:
                     # decode/auth errors surface BEFORE the admin plane
                     # advances — same failure behaviour as the serial loop
@@ -807,6 +912,263 @@ class CollaborativeSession:
                 losses.append(loss)
                 plan = next_plan
         return params, losses
+
+    # ------------------------------------------------ fault-tolerant rounds
+    def _run_tolerant(self, params, grad_fn: Callable, update_fn: Callable,
+                      lr: float, n_rounds: int,
+                      round_timeout_s: Optional[float],
+                      quorum: Optional[int], journal, rejoin_after):
+        from concurrent.futures import ThreadPoolExecutor
+        from repro.core.tee import wire
+        from repro.core.tee.faults import RoundJournal
+
+        journal = journal if journal is not None else RoundJournal()
+        if self.chaos is not None:
+            self.service.kds.fault_hook = self.chaos.kds_fault
+        losses = []
+        start = self._next_round
+        old_min = self.membership.min_active
+        if quorum is not None:
+            # the membership quorum and the round-closure quorum are the
+            # same number: a drop that would leave fewer silos is refused
+            self.membership.min_active = max(quorum, 1)
+        ex = ThreadPoolExecutor(max_workers=max(self.n_silos, 1),
+                                thread_name_prefix="collect")
+        try:
+            for t in range(start, start + n_rounds):
+                self._rejoin_downed(t, rejoin_after)
+                params, loss, active = self._step_tolerant(
+                    t, params, grad_fn, update_fn, lr, round_timeout_s,
+                    quorum, ex)
+                losses.append(loss)
+                journal.commit(t, active, wire.encode_tree(params),
+                               downed=self._downed)
+        finally:
+            self.membership.min_active = old_min
+            if self.chaos is not None:
+                self.service.kds.fault_hook = None
+            # waits for any still-hung workers (bounded by the injected
+            # hang durations); their late results are discarded
+            ex.shutdown(wait=True)
+            self._inflight.clear()
+        return params, losses
+
+    def _rejoin_downed(self, t: int, rejoin_after: Optional[int]) -> None:
+        """Re-admit silos dropped by deadline/quorum closure once they have
+        sat out ``rejoin_after`` rounds — through the full async-rejoin path
+        (fresh attestation, KDS re-release with transient-denial backoff,
+        channel rebuild, warm resync). A silo whose hung worker is still
+        running is skipped until it resolves (its handler state must not be
+        touched concurrently)."""
+        if rejoin_after is None:
+            return
+        for silo in sorted(self._downed):
+            if t - self._downed[silo] < rejoin_after:
+                continue
+            fut = self._inflight.get(silo)
+            if fut is not None and not fut.done():
+                continue
+            self._inflight.pop(silo, None)
+            if self.chaos is not None:
+                self.chaos.arm_kds(t)
+            if self.rejoin_silo_async(silo):
+                del self._downed[silo]
+
+    def _step_tolerant(self, t: int, params, grad_fn: Callable,
+                       update_fn: Callable, lr: float,
+                       round_timeout_s: Optional[float],
+                       quorum: Optional[int], ex):
+        """One deadline/quorum round, replayed until it commits.
+
+        Each attempt resolves the plan over the CURRENT membership, collects
+        concurrently under the deadline, and either (a) commits — every
+        expected silo responded and every update authenticated — or (b)
+        shrinks membership (non-responders dropped with timeout attribution;
+        integrity offenders attributed and dropped, their updates never
+        retried) and replays. The replay recomputes every contribution and
+        the admin-mode closing row over the realized set, so the committed
+        round is bit-identical to a scheduled elastic round with that active
+        set. Injected faults are one-shot, so replays converge; the attempt
+        bound only guards against a genuinely wedged deployment."""
+        from repro.core.tee import wire
+        from repro.core.tee.faults import UpdaterCrashError
+
+        for _attempt in range(2 * self.n_silos + 4):
+            plan = self._admin_plane(t)
+            active = plan["active"]
+            n_active = int(np.sum(active))
+            if n_active == 0:
+                raise RuntimeError(
+                    "no silo may contribute this round (budgets exhausted "
+                    "or membership empty); DP forbids further training")
+            q = n_active if quorum is None else min(quorum, n_active)
+            responders, nonresponders = self._collect_tolerant(
+                params, plan, grad_fn, round_timeout_s, q, t, ex)
+            if nonresponders:
+                with self._stats_lock:
+                    self.fault_stats["quorum_closures"] += 1
+                    self.fault_stats["rounds_replayed"] += 1
+                for silo in nonresponders:
+                    if self.membership.drop(silo, step=t):
+                        self._downed[silo] = t
+                    if round_timeout_s:
+                        self.telemetry.penalize(silo, round_timeout_s)
+                continue  # replay over the realized set
+            # full expected set responded: aggregate with per-silo
+            # attribution. The tag is built from the leaves each worker
+            # digested at PRODUCTION time (not handler.last_leaf, which a
+            # late hung worker could clobber), so corruption in transit
+            # shows up as a leaf/path mismatch at ingest — attributed.
+            names = [h.name for h in self.handlers if active[h.silo_idx]]
+            batch = self.admin.batch_tag(
+                [(n, responders[n][1]) for n in names], t) \
+                if self.batch_mac else None
+            rs = self.updater.begin_round(params, expected=names,
+                                          batch=batch)
+            bad = []
+            for name in names:
+                try:
+                    self.updater.ingest(rs, name, responders[name][0])
+                except (wire.WireFormatError, ValueError) as e:
+                    bad.append((name, e))
+            if bad:
+                # integrity: fail closed — never retry these updates, drop
+                # and attribute the offenders, discard the aggregate
+                with self._stats_lock:
+                    for name, e in bad:
+                        self.fault_stats["integrity_failures"].append(
+                            {"round": t, "silo": name, "error": str(e)})
+                    self.fault_stats["rounds_replayed"] += 1
+                by_name = {h.name: h.silo_idx for h in self.handlers}
+                for name, _ in bad:
+                    if self.membership.drop(by_name[name], step=t):
+                        self._downed[by_name[name]] = t
+                continue
+            if self.chaos is not None:
+                self.updater.fault_hook = \
+                    lambda _t=t: self.chaos.updater_fault(_t)
+            try:
+                new_params, loss = self.updater.finish_round(
+                    rs, update_fn, lr, batch)
+            except UpdaterCrashError:
+                # crash between ingest and finish: the partial round is
+                # discarded (nothing committed, nothing journaled) and the
+                # whole round replays — round-keyed streams make the replay
+                # bit-exact
+                with self._stats_lock:
+                    self.fault_stats["updater_recoveries"] += 1
+                    self.fault_stats["rounds_replayed"] += 1
+                continue
+            finally:
+                self.updater.fault_hook = None
+            self.admin.advance(plan["keys"], plan["active"])
+            with self._stats_lock:
+                self.wire_stats["rounds"] += 1
+            return new_params, loss, np.asarray(plan["active"], bool)
+        raise RuntimeError(
+            f"round {t} failed to close after {2 * self.n_silos + 4} "
+            f"attempts (persistent faults beyond the chaos model)")
+
+    def _collect_tolerant(self, params, plan: dict, grad_fn: Callable,
+                          round_timeout_s: Optional[float], q: int, t: int,
+                          ex):
+        """Concurrent collect under a deadline: every expected handler is
+        dispatched at once; after ``round_timeout_s`` the round closes if at
+        least ``q`` responders have landed (otherwise it keeps waiting until
+        quorum or until every worker resolves — closing below quorum would
+        break the DP participation floor). Returns ``(responders,
+        nonresponders)``: responders maps handler name -> (delivered sealed
+        blob, production-time leaf digest); nonresponders lists silo indices
+        that crashed or are still hung — their workers keep running
+        detached and their eventual results are discarded."""
+        import hashlib
+        from concurrent.futures import wait
+        from repro.core.tee.faults import Backoff, SiloCrashError
+
+        blob, is_bcast = self._params_broadcast(params)
+        active = plan["active"]
+        with self._stats_lock:
+            self.wire_stats["broadcast_bytes"] += len(blob) if is_bcast \
+                else len(blob) * int(np.sum(active))
+        admin_row = None
+        if self.privacy.enabled and self.privacy.mask_mode == "admin" \
+                and bool(np.any(active)):
+            admin_row = self.admin.closing_mask_row(
+                self.privacy, params, plan["keys"], active,
+                plan["noise_state"], self.clip_bound)
+        handlers = [h for h in self.handlers if active[h.silo_idx]]
+        chaos = self.chaos
+
+        def worker(h):
+            if chaos is not None:
+                h.fault_hook = lambda silo, _t=t: chaos.handler_fault(_t,
+                                                                      silo)
+            try:
+                u = self._compute_one(h, blob, plan, grad_fn, admin_row)
+            finally:
+                h.fault_hook = None
+            leaf = hashlib.sha256(u).digest()
+            delivered = u
+            if chaos is not None:
+                delivered = chaos.transit_fault(t, h.silo_idx, u)
+                if delivered is None:
+                    # transient DROP: the blob never arrived; the sender's
+                    # retransmit buffer re-delivers the SAME sealed blob
+                    # after backoff (the channel's monotone counter admits a
+                    # first delivery at any value — this is not a replay)
+                    with self._stats_lock:
+                        self.fault_stats["transient_retries"] += 1
+                    Backoff(seed=t * 1009 + h.silo_idx).sleep()
+                    delivered = u
+            return h.name, delivered, leaf
+
+        futs = {ex.submit(worker, h): h for h in handlers}
+        done, pending = wait(set(futs), timeout=round_timeout_s)
+        if pending:
+            with self._stats_lock:
+                self.fault_stats["deadline_hits"] += 1
+        while pending and \
+                sum(1 for f in done if f.exception() is None) < q:
+            d2, pending = wait(pending, timeout=0.02)
+            done |= d2
+        responders, nonresponders = {}, []
+        for f in done:
+            exc = f.exception()
+            if exc is None:
+                name, delivered, leaf = f.result()
+                responders[name] = (delivered, leaf)
+            elif isinstance(exc, SiloCrashError):
+                nonresponders.append(futs[f].silo_idx)
+            else:
+                raise exc
+        for f in pending:  # hung past the deadline with quorum met
+            silo = futs[f].silo_idx
+            nonresponders.append(silo)
+            self._inflight[silo] = f
+        return responders, nonresponders
+
+    def resume(self, journal):
+        """Continue from a :class:`~repro.core.tee.faults.RoundJournal`
+        after a driver restart: replay each committed round's participation
+        bitmask through the admin (rolling the noise-correction state and
+        the ledger — contributions, steps and budget verdicts all land
+        exactly where the crashed driver left them), re-drop the journaled
+        downed silos, and return the journaled params (None for an empty
+        journal). The next :meth:`run` call then starts at the correct round
+        index with a fresh FULL broadcast — bit-identical from there on to a
+        driver that never died, because every stream is keyed by the round
+        index."""
+        from repro.core.tee import wire
+
+        for rec in journal.rounds:
+            keys = self.admin.keys_for_step(rec["round"])
+            self.admin.advance(keys, np.asarray(rec["active"], bool))
+        nxt = journal.rounds[-1]["round"] + 1 if journal.rounds else 0
+        for silo, rnd in journal.downed.items():
+            if self.membership.drop(int(silo), step=nxt):
+                self._downed[int(silo)] = int(rnd)
+        return wire.decode_tree(journal.params_blob) \
+            if journal.params_blob is not None else None
 
     def epsilon(self, silo: Optional[int] = None) -> float:
         """Spent epsilon — global, or silo-specific over that owner's own

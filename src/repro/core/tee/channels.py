@@ -38,6 +38,15 @@ VER_LEGACY = 1
 VER_FAST = 2
 
 
+class IntegrityError(ValueError):
+    """Authentication failure on a sealed blob or channel message (bad MAC,
+    truncated frame, replayed counter). The failure-model contract
+    (docs/failure_model.md): integrity failures are NEVER retried — the
+    session fails closed and attributes them, unlike transient delivery
+    faults which are retried with backoff. Subclasses ValueError so existing
+    callers' except clauses keep working."""
+
+
 def _keystream_legacy(key: bytes, nonce: bytes, n: int) -> bytes:
     """Seed reference: one SHA-256 call per 32-byte block (slow by design —
     the wire benchmark's 'pickle' baseline uses it)."""
@@ -115,13 +124,13 @@ def open_sealed(key: bytes, blob: bytes, aad: bytes = b"",
     blobs whose integrity rests on this tag alone."""
     enc_key, mac_key = _enc_mac_keys(key)
     if len(blob) < 49:
-        raise ValueError("sealed blob truncated (needs version+nonce+tag)")
+        raise IntegrityError("sealed blob truncated (needs version+nonce+tag)")
     version, nonce, tag, ct = blob[0], blob[1:17], blob[17:49], blob[49:]
     if verify:
         expect = hmac.new(mac_key, bytes([version]) + nonce + aad + ct,
                           hashlib.sha256).digest()
         if not hmac.compare_digest(expect, tag):
-            raise ValueError("authentication failed (tampered or wrong key)")
+            raise IntegrityError("authentication failed (tampered or wrong key)")
     if version == VER_FAST:
         return _xor_fast(ct, _keystream(enc_key, nonce, len(ct)))
     if version == VER_LEGACY:
@@ -154,8 +163,13 @@ class SecureChannel:
         caller checks (see ``ModelUpdater`` batch mode)."""
         ctr = struct.unpack("<Q", blob[:8])[0]
         if ctr <= self._recv_ctr:
-            raise ValueError(f"replayed message (ctr {ctr} <= {self._recv_ctr})")
+            raise IntegrityError(
+                f"replayed message (ctr {ctr} <= {self._recv_ctr})")
         aad = f"{self.peer}:{ctr}".encode()
+        # _recv_ctr only advances AFTER a successful open: a blob lost in
+        # transit (the chaos DROP fault) can be re-delivered verbatim and is
+        # accepted as a first delivery, while a blob that failed its MAC
+        # burns nothing — the next honest counter still verifies
         out = open_sealed(self.key, blob[8:], aad, verify=verify)
         self._recv_ctr = ctr
         return out

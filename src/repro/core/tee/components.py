@@ -277,6 +277,12 @@ class DataHandler(Component):
     # wire codec: 'packed' ships raw flat buffers + XOR-delta param sync;
     # 'pickle' keeps the legacy pytree blobs (benchmark baseline)
     codec: str = "packed"
+    # chaos-injection hook (core/tee/faults.py): called with the silo index
+    # at compute_update entry — an injected crash raises SiloCrashError
+    # there, an injected hang sleeps past the round deadline. None in
+    # production: zero overhead. Deliberately NOT part of the guarded
+    # measurement (the harness lives outside the trusted computing base).
+    fault_hook: Optional[Callable] = None
 
     def __post_init__(self):
         super().__post_init__()
@@ -454,6 +460,8 @@ class DataHandler(Component):
         enforcement sits inside the TEE boundary. ``admin_row``: admin-mode
         O(P) fan-out — the ``(closing, row_tree)`` pair the admin
         distributed; only the closing silo consumes it."""
+        if self.fault_hook is not None:
+            self.fault_hook(self.silo_idx)
         if self.admin is not None:
             allowed = self.admin.verdict_for(self.silo_idx)
         else:
@@ -523,8 +531,17 @@ class ModelUpdater(Component):
     # parameter-axis accumulation threads; 0/1 = serial left fold
     shard_workers: int = 0
     # audit-trail bound: received_updates keeps the newest entries only (at
-    # 400 silos an unbounded trail pins n*P floats per round forever)
+    # 400 silos an unbounded trail pins n*P floats per round forever).
+    # Sessions size it from n_silos (api.from_silos: max(256, 2n)); every
+    # entry aged out is counted in truncated_entries so a shortened trail
+    # is visible to auditors instead of silently deleted.
     received_cap: int = 256
+    truncated_entries: int = 0
+    # chaos-injection hook (core/tee/faults.py): called at finish_round
+    # entry — i.e. between the last ingest and the round commit, the
+    # crash window the RoundJournal recovery path covers. None in
+    # production: zero overhead.
+    fault_hook: Optional[Callable] = None
 
     def verify_batch_tag(self, batch: dict) -> None:
         """Check the round-level MAC binding (round, leaf count, Merkle
@@ -645,7 +662,9 @@ class ModelUpdater(Component):
                 jax.tree.map(np.asarray, payload["update"]))
             loss = float(payload["loss"])
             buf = wire.pack_np(layout, payload["update"])
-        if len(self.received_updates) > self.received_cap:
+        overflow = len(self.received_updates) - self.received_cap
+        if overflow > 0:
+            self.truncated_entries += overflow
             del self.received_updates[:-self.received_cap]
         # both sides are fp32 by wire contract (decode_update / pack_np):
         # a plain add keeps the ingestion path copy-free
@@ -667,6 +686,8 @@ class ModelUpdater(Component):
         the aggregate is DISCARDED, not committed), check the expected set
         is complete, divide by the actual contribution count and run the
         (sandbox-supplied) model-updating code."""
+        if self.fault_hook is not None:
+            self.fault_hook()
         rs = round_state
         if rs["batch_mode"] and rs["batch"] is None:
             if batch is None:

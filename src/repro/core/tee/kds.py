@@ -24,6 +24,12 @@ class KeyDistributionService:
         self.attestation = attestation
         self._records: dict[str, KeyRecord] = {}
         self.audit_log: list = []
+        # chaos-injection hook (core/tee/faults.py): called at request_key
+        # entry; a transient release hiccup raises KdsTransientDenial there,
+        # which callers retry with backoff — distinct from the attestation
+        # PermissionError below, which is an integrity failure and is never
+        # retried. None in production: zero overhead.
+        self.fault_hook = None
 
     def upload_key(self, asset_id: str, key: bytes, owner: str,
                    expected_measurement: str, expected_policy: str) -> None:
@@ -33,6 +39,8 @@ class KeyDistributionService:
                                             expected_policy)
 
     def request_key(self, asset_id: str, report: AttestationReport) -> bytes:
+        if self.fault_hook is not None:
+            self.fault_hook(asset_id, report)
         rec = self._records.get(asset_id)
         if rec is None:
             raise KeyError(f"unknown asset {asset_id!r}")

@@ -14,6 +14,77 @@ from repro.api import Session
 from repro.configs.base import OptimizerConfig, PrivacyConfig
 
 
+def run_wire(args):
+    """Wire-tier demo: N fault-tolerant component-protocol rounds on the
+    MNIST-MLP3 model (the examples/collaborative_mnist.py setup), with
+    optional deadline/quorum closure, seeded chaos and a crash-consistent
+    journal (docs/failure_model.md)."""
+    import os
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api import CollaborativeSession
+    from repro.configs.paper_models import MNIST_MLP3
+    from repro.core.tee.faults import FaultInjector, FaultPlan, RoundJournal
+    from repro.data.synthetic import synthetic_mnist
+    from repro.models.small import build_small_model
+
+    n = args.silos
+    rounds = args.wire_rounds
+    sm = build_small_model(MNIST_MLP3)
+    params = sm.init(jax.random.PRNGKey(1))
+    train, _ = synthetic_mnist(n_train=1024, n_test=256)
+    silo_data = [{"x": jnp.asarray(s.x), "y": jnp.asarray(s.y)}
+                 for s in train.split(n)]
+    priv = PrivacyConfig(enabled=not args.no_privacy, sigma=args.sigma,
+                         clip_bound=1.0)
+    sess = CollaborativeSession.from_silos(silo_data, priv,
+                                           params_template=params)
+
+    def grad_fn(p, data):
+        return jax.value_and_grad(sm.loss)(p, data)
+
+    def update_fn(p, update, lr):
+        return jax.tree.map(lambda a, u: a - lr * u.astype(a.dtype),
+                            p, update)
+
+    chaos = None
+    if args.chaos_seed is not None:
+        quorum = args.quorum or max(2, (2 * n) // 3)
+        plan = FaultPlan.from_seed(args.chaos_seed, n, rounds, quorum=quorum)
+        print(f"chaos plan seed={plan.seed}: {plan.counts()}")
+        chaos = FaultInjector(plan)
+
+    journal = None
+    if args.journal:
+        if os.path.exists(args.journal):
+            journal = RoundJournal.load(args.journal)
+            params = sess.resume(journal)
+            print(f"resumed from {args.journal}: "
+                  f"{journal.rounds_done} rounds already committed")
+        else:
+            journal = RoundJournal(path=args.journal)
+
+    params, losses = sess.run(params, grad_fn, update_fn, args.lr, rounds,
+                              round_timeout_s=args.round_timeout,
+                              quorum=args.quorum, chaos=chaos,
+                              journal=journal)
+    print(f"wire tier: {len(losses)} rounds closed, "
+          f"final loss={losses[-1]:.4f}"
+          + (f" eps={sess.epsilon():.3f}" if priv.enabled else ""))
+    st = sess.fault_stats
+    print("fault stats: " + ", ".join(
+        f"{k}={len(v) if isinstance(v, list) else v}"
+        for k, v in sorted(st.items())))
+    if args.spend_report:
+        report = sess.privacy_report()
+        if report is not None:
+            with open(args.spend_report, "w") as f:
+                json.dump(report, f, indent=1)
+            print(f"spend report written to {args.spend_report}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -55,7 +126,35 @@ def main():
                     help="deterministic dropout demo: comma-separated "
                          "step:silo[:cooldown] triples, e.g. '10:3:5,20:2' "
                          "(silo 3 out for steps 10-14, silo 2 out from 20 on)")
+    ap.add_argument("--wire-rounds", type=int, default=None, metavar="N",
+                    help="run N rounds of the wire-tier component protocol "
+                         "(CollaborativeSession on the MNIST-MLP3 demo "
+                         "model) instead of the fused trainer; combine with "
+                         "--round-timeout/--quorum/--chaos-seed for "
+                         "fault-tolerant rounds (docs/failure_model.md)")
+    ap.add_argument("--round-timeout", type=float, default=None, metavar="S",
+                    help="wire tier: per-round deadline in seconds; the "
+                         "round closes at the deadline once a quorum of "
+                         "updates has landed, non-responders are dropped "
+                         "and the round replays over the realized set")
+    ap.add_argument("--quorum", type=int, default=None,
+                    help="wire tier: minimum responders to close a round "
+                         "(also the membership drop floor)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="wire tier: inject a seeded FaultPlan (crashes, "
+                         "hangs, drops, corruption, KDS denials, updater "
+                         "crashes) — replayable chaos for the tolerant path")
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="wire tier: crash-consistent round journal; if the "
+                         "file exists the run RESUMES from it")
     args = ap.parse_args()
+
+    if args.wire_rounds is not None:
+        return run_wire(args)
+    if args.round_timeout is not None or args.quorum is not None \
+            or args.chaos_seed is not None or args.journal is not None:
+        raise SystemExit("--round-timeout/--quorum/--chaos-seed/--journal "
+                         "are wire-tier options: add --wire-rounds N")
 
     sess = Session.from_config(
         args.arch, full=args.full,

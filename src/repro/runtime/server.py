@@ -39,6 +39,11 @@ class Request:
     # admission-control identity (the data owner / API key the request
     # arrived under); None = untenanted, exempt from per-tenant slot caps
     tenant: Optional[str] = None
+    # scheduling priority: under page-pool pressure the ContinuousServer may
+    # preempt the lowest-priority running slot to admit a STRICTLY
+    # higher-priority request (the preempted request is re-queued at its
+    # original position and restored by recompute — token-identical output)
+    priority: int = 0
 
 
 @dataclass
@@ -60,6 +65,9 @@ class ServerStats:
     # speculative decoding: draft proposals made / accepted by the verifier
     spec_proposed: int = 0
     spec_accepted: int = 0
+    # graceful degradation: slots evicted under pool pressure to admit a
+    # higher-priority request (each restored later by recompute)
+    preemptions: int = 0
 
     @property
     def utilization(self) -> float:

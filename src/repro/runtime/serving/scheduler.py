@@ -70,6 +70,13 @@ class _Slot:
     req: Request
     pos: int = 0                    # prompt tokens prefilled so far
     pending: Optional[int] = None   # next decode input (set at prefill end)
+    seq: int = 0                    # original submit order (for re-queue)
+    # effective prompt: the submitted prompt plus any tokens generated
+    # before a preemption — restoring an evicted request is just prefilling
+    # this (greedy decode makes the recompute token-identical, and the
+    # chunked prefill's final argmax IS the next token, so nothing is
+    # double-counted)
+    prompt: Optional[np.ndarray] = None
 
 
 def _bucket_pages(tokens_needed: int, page_size: int, cap: int) -> int:
@@ -229,16 +236,29 @@ class ContinuousServer:
                 return  # every backlogged tenant capped: stop scanning
             t_star = max(eligible, key=lambda t: (self._deficit.get(t, 0.0),
                                                   -self.queues[t][0][0]))
-            req = self.queues[t_star][0][1]
-            shared = (self.pool.prefix_lookup(req.tenant, req.prompt)
+            # pop the candidate BEFORE the allocation attempt: preemption
+            # may re-queue a same-tenant victim at the front of this very
+            # subqueue, so a popleft afterwards could remove the wrong entry
+            seq, req = self.queues[t_star].popleft()
+            self.queued -= 1
+            # effective prompt: original prompt + tokens generated before a
+            # preemption (empty for a first admission)
+            eff = req.prompt if not req.generated else np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.generated, np.int32)])
+            shared = (self.pool.prefix_lookup(req.tenant, eff)
                       if self.prefix_sharing else [])
             need = _bucket_pages(len(req.prompt) + req.max_new_tokens,
                                  self.pool.page_size,
                                  self.pool.tables.shape[1])
             if not self.pool.alloc(i, need, shared=shared):
-                return  # pool pressure: retry next step, keep FIFO order
-            self.queues[t_star].popleft()
-            self.queued -= 1
+                # pool pressure: preempt strictly-lower-priority slots
+                # until the allocation fits, else put the candidate back
+                # and retry next step (FIFO order kept either way)
+                if not self._preempt_for(req, i, need, shared):
+                    self.queues[t_star].appendleft((seq, req))
+                    self.queued += 1
+                    return
             backlogged = [t for t, q in self.queues.items() if q]
             if backlogged:
                 W = sum(self._weight(t) for t in backlogged)
@@ -251,7 +271,38 @@ class ContinuousServer:
                 self._deficit.pop(t_star, None)
             S0 = len(shared) * self.pool.page_size
             self.stats.shared_prompt_tokens += S0
-            self.slots[i] = _Slot(req, pos=S0)
+            self.slots[i] = _Slot(req, pos=S0, seq=seq,
+                                  prompt=np.asarray(eff, np.int32))
+
+    def _preempt_for(self, req: Request, i: int, need: int,
+                     shared: list) -> bool:
+        """Evict running slots whose priority is STRICTLY below ``req``'s
+        (so equal-priority traffic can never preempt itself and there are no
+        preemption cycles), cheapest recompute first (fewest generated
+        tokens), until the allocation for slot ``i`` fits. Evicted requests
+        go back to the FRONT of their tenant's subqueue under their original
+        submit seq, so DRR ordering is undisturbed and they restore by
+        recompute of prompt + generated — token-identical under greedy
+        decode. Returns False (nothing evicted beyond what helped) when no
+        strictly-lower-priority victim remains and the allocation still
+        doesn't fit."""
+        while True:
+            victims = [j for j, s in enumerate(self.slots)
+                       if s is not None and s.req.priority < req.priority]
+            if not victims:
+                return False
+            j = min(victims, key=lambda j: (self.slots[j].req.priority,
+                                            len(self.slots[j].req.generated)))
+            s = self.slots[j]
+            self.pool.release(j)
+            self.slots[j] = None
+            self.queues.setdefault(s.req.tenant,
+                                   collections.deque()).appendleft(
+                (s.seq, s.req))
+            self.queued += 1
+            self.stats.preemptions += 1
+            if self.pool.alloc(i, need, shared=shared):
+                return True
 
     def _finish(self, i: int, req: Request) -> None:
         req.done = True
@@ -275,14 +326,14 @@ class ContinuousServer:
     def _run_prefill_chunks(self) -> None:
         C = self.prefill_chunk
         idx = [i for i, s in enumerate(self.slots)
-               if s is not None and s.pos < len(s.req.prompt)]
+               if s is not None and s.pos < len(s.prompt)]
         if not idx:
             return
         tokens = np.zeros((self.n_slots, C), np.int32)
         n_valid = np.zeros((self.n_slots,), np.int32)
         for i in idx:
             s = self.slots[i]
-            chunk = s.req.prompt[s.pos:s.pos + C]
+            chunk = s.prompt[s.pos:s.pos + C]
             tokens[i, :len(chunk)] = chunk
             n_valid[i] = len(chunk)
         if self.speculative:
@@ -301,9 +352,8 @@ class ContinuousServer:
             s.pos += int(n_valid[i])
             self.pool.lengths[i] += int(n_valid[i])
             if self.prefix_sharing:
-                self.pool.register_prefix(i, s.req.tenant, s.req.prompt,
-                                          s.pos)
-            if s.pos == len(s.req.prompt):
+                self.pool.register_prefix(i, s.req.tenant, s.prompt, s.pos)
+            if s.pos == len(s.prompt):
                 # prefill done: the chunk's last-valid logits give the first
                 # generated token (same source as the wave's prefill logits)
                 if self.trace_logits:

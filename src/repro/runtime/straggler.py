@@ -52,6 +52,16 @@ class SiloTelemetry:
         for silo, t in enumerate(step_times_s):
             self.observe(silo, float(t))
 
+    def penalize(self, silo: int, deadline_s: float,
+                 factor: float = 3.0) -> None:
+        """Attribution for a silo that never responded: a non-responder has
+        no round-trip to observe, but leaving its EMA untouched would make a
+        hung silo look *fast* to ``slowest``. Fold in a penalty observation
+        of ``deadline_s * factor`` (at least) so drop decisions and spend
+        reports reflect the timeout."""
+        self.observe(silo, max(deadline_s * factor,
+                               self._ema.get(silo, 0.0)))
+
     def ema(self, silo: int) -> Optional[float]:
         return self._ema.get(silo)
 

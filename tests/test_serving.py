@@ -652,3 +652,67 @@ def test_encoder_rejects_decode():
     from repro.configs.base import SHAPES, shape_applicability
     ok, reason = shape_applicability(cfg, SHAPES["decode_32k"])
     assert not ok and "encoder" in reason
+
+
+def test_preemption_by_page_eviction_token_identical():
+    """Graceful degradation under pool pressure: a late STRICTLY
+    higher-priority request evicts the lowest-priority running slot (pages
+    released back to the pool), the victim is re-queued at its original
+    position and restored by recompute — and every request, victim
+    included, emits exactly the tokens an ample-pool run produces."""
+    cfg, model, params = _serving_model()
+    rng = np.random.RandomState(61)
+
+    def mk_reqs():
+        lows = [Request(rid=i, prompt=rng.randint(
+                    0, cfg.vocab_size, 10).tolist(), max_new_tokens=6,
+                    priority=0) for i in range(2)]
+        hi = Request(rid=9, prompt=rng.randint(
+            0, cfg.vocab_size, 10).tolist(), max_new_tokens=6, priority=5)
+        return lows, hi
+
+    rng_state = rng.get_state()
+    # 8 pages of 4 tokens; each request buckets to 4 pages, so the two
+    # low-priority requests hold the whole pool while a slot stays free
+    srv = ContinuousServer(model, params, max_batch=3, max_len=32,
+                           page_size=4, prefill_chunk=4, n_pages=8)
+    lows, hi = mk_reqs()
+    for r in lows:
+        srv.submit(r)
+    srv.step()  # both lows admitted, pool exhausted
+    assert all(s is not None for s in srv.slots[:2])
+    srv.submit(hi)
+    srv.step()  # high-priority request must preempt a low one NOW
+    assert srv.stats.preemptions == 1
+    held = {s.req.rid for s in srv.slots if s is not None}
+    assert 9 in held, "high-priority request was not admitted"
+    srv.run_until_drained()
+    assert all(r.done for r in lows + [hi])
+
+    rng.set_state(rng_state)
+    ample = ContinuousServer(model, params, max_batch=3, max_len=32,
+                             page_size=4, prefill_chunk=4)  # default pool
+    a_lows, a_hi = mk_reqs()
+    for r in a_lows:
+        ample.submit(r)
+    ample.step()
+    ample.submit(a_hi)
+    ample.run_until_drained()
+    for got, want in zip(lows + [hi], a_lows + [a_hi]):
+        assert got.generated == want.generated, f"rid {got.rid} diverged"
+
+
+def test_equal_priority_never_preempts():
+    """Preemption requires STRICTLY higher priority — equal-priority
+    traffic waits for pages instead of evicting itself (no churn cycles)."""
+    cfg, model, params = _serving_model()
+    rng = np.random.RandomState(62)
+    mk = lambda rid: Request(rid=rid, prompt=rng.randint(
+        0, cfg.vocab_size, 10).tolist(), max_new_tokens=6, priority=3)
+    srv = ContinuousServer(model, params, max_batch=3, max_len=32,
+                           page_size=4, prefill_chunk=4, n_pages=8)
+    for i in range(3):
+        srv.submit(mk(i))
+    srv.run_until_drained()
+    assert srv.stats.preemptions == 0
+    assert all(len(q) == 0 for q in srv.queues.values())
